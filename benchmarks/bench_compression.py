@@ -1,0 +1,74 @@
+"""Figure-2 reproduction: embedding compression (hash / quotient-remainder).
+
+Claims checked (paper §7 "Scaling up CLAX"):
+  1. model-ranking Kendall's tau vs uncompressed stays high up to 10-100x;
+  2. compression degrades absolute perplexity mildly (higher ppl);
+  3. compressed training is not slower (smaller tables).
+"""
+from __future__ import annotations
+
+from scipy.stats import kendalltau
+
+from benchmarks.common import evaluate_clicks, make_dataset, train_gradient
+from repro.core import (Compression, EmbeddingParameterConfig, MODEL_REGISTRY)
+
+MODELS = ("dctr", "pbm", "ubm", "dcm", "sdbn")
+RATIOS = (2.0, 10.0, 100.0)
+
+
+def _attraction(n_docs, compression, ratio):
+    return EmbeddingParameterConfig(
+        parameters=n_docs, compression=compression, compression_ratio=ratio,
+        init_logit=-2.0)
+
+
+def run(n_sessions=40_000, epochs=5, quick=False):
+    if quick:
+        n_sessions, epochs = 15_000, 3
+        models = ("dctr", "pbm", "ubm")
+    else:
+        models = MODELS
+    cfg, meta, train, val, test = make_dataset(n_sessions=n_sessions,
+                                               behavior="dbn", seed=1)
+    n_docs = cfg.n_query_doc_pairs
+    results = {}
+    for compression in (Compression.NONE, Compression.HASH, Compression.QR):
+        ratios = (1.0,) if compression == Compression.NONE else RATIOS
+        for ratio in ratios:
+            for name in models:
+                model = MODEL_REGISTRY[name](
+                    positions=cfg.positions,
+                    attraction=_attraction(n_docs, compression, ratio))
+                params, secs = train_gradient(model, train, val, epochs=epochs)
+                m = evaluate_clicks(model, params, test,
+                                    positions=cfg.positions)
+                results[(compression.value, ratio, name)] = (m, secs)
+    return models, results
+
+
+def main(quick=False):
+    models, results = run(quick=quick)
+    base_rank = sorted(models,
+                       key=lambda n: results[("none", 1.0, n)][0]["ppl"])
+    print(f"{'compression':18s} {'ratio':>6s} {'kendall_tau':>11s} "
+          f"{'mean_ppl':>9s} {'mean_secs':>9s}")
+    out = []
+    for compression in ("none", "hash", "quotient_remainder"):
+        ratios = (1.0,) if compression == "none" else RATIOS
+        for ratio in ratios:
+            rank = sorted(models,
+                          key=lambda n: results[(compression, ratio, n)][0]["ppl"])
+            tau = kendalltau([base_rank.index(n) for n in models],
+                             [rank.index(n) for n in models]).statistic
+            ppl = sum(results[(compression, ratio, n)][0]["ppl"]
+                      for n in models) / len(models)
+            secs = sum(results[(compression, ratio, n)][1]
+                       for n in models) / len(models)
+            print(f"{compression:18s} {ratio:6.0f} {tau:11.3f} {ppl:9.4f} "
+                  f"{secs:9.1f}")
+            out.append((compression, ratio, tau, ppl, secs))
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Figure-3 reproduction: scaling CLAX to Baidu-ULTR-sized tables.
+
+The paper trains 1B+ sessions / 2^31 hashed ids on one A6000 in ~2h. This
+container has one CPU, so we measure the jit'd step throughput at increasing
+hashed-table sizes and report the projected wall-time for one epoch over 800M
+training sessions — the quantity the paper's Figure 3 fixes. The dry-run +
+roofline cover the multi-pod version of the same workload.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timed
+from repro import optim
+from repro.core import (Compression, EmbeddingParameterConfig, MODEL_REGISTRY)
+
+POSITIONS = 10
+BATCH = 2048
+
+
+def _batch(rng, n_ids):
+    return {
+        "positions": jnp.asarray(np.tile(np.arange(1, POSITIONS + 1),
+                                         (BATCH, 1)), jnp.int32),
+        "query_doc_ids": jnp.asarray(
+            rng.integers(0, n_ids, (BATCH, POSITIONS)), jnp.int32),
+        "clicks": jnp.asarray(
+            (rng.random((BATCH, POSITIONS)) < 0.12).astype(np.float32)),
+        "mask": jnp.ones((BATCH, POSITIONS), bool),
+    }
+
+
+def run(quick=False):
+    rng = np.random.default_rng(0)
+    table_sizes = [10**5, 10**6, 10**7] if not quick else [10**5, 10**6]
+    rows = []
+    for name in ("pbm", "ubm", "dbn"):
+        for n_ids in table_sizes:
+            attraction = EmbeddingParameterConfig(
+                parameters=n_ids * 10, compression=Compression.HASH,
+                compression_ratio=10.0, baseline_correction=True,
+                init_logit=-2.0)
+            model = MODEL_REGISTRY[name](positions=POSITIONS,
+                                         attraction=attraction,
+                                         query_doc_pairs=n_ids)
+            tx = optim.adamw(3e-3)
+            params = model.init(jax.random.PRNGKey(0))
+            opt_state = tx.init(params)
+
+            @jax.jit
+            def step(params, opt_state, batch):
+                loss, grads = jax.value_and_grad(model.compute_loss)(
+                    params, batch)
+                updates, opt_state = tx.update(grads, opt_state, params)
+                return optim.apply_updates(params, updates), opt_state, loss
+
+            batch = _batch(rng, n_ids * 10)
+            (_, _, _), secs = timed(lambda: step(params, opt_state, batch),
+                                    warmup=2, iters=8)
+            rows.append((name, n_ids * 10, secs,
+                         BATCH / secs))
+    return rows
+
+
+def main(quick=False):
+    rows = run(quick=quick)
+    print(f"{'model':5s} {'hashed_ids':>12s} {'s/step':>8s} "
+          f"{'sessions/s':>11s} {'proj_800M_hours':>15s}")
+    for name, ids, secs, sps in rows:
+        print(f"{name:5s} {ids:12d} {secs:8.4f} {sps:11.0f} "
+              f"{800e6 / sps / 3600:15.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

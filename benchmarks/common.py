@@ -1,0 +1,80 @@
+"""Shared helpers for the paper-table benchmarks (CPU-sized)."""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
+from repro.core import (ConditionalPerplexity, LogLikelihood, MultiMetric,
+                        Perplexity)
+from repro.data import ClickLogLoader, SyntheticConfig, generate_click_log, split_sessions
+
+
+def make_dataset(n_sessions=60_000, behavior="dbn", seed=0, n_queries=300,
+                 docs_per_query=15, positions=10, n_features=0):
+    cfg = SyntheticConfig(n_sessions=n_sessions, n_queries=n_queries,
+                          docs_per_query=docs_per_query, positions=positions,
+                          behavior=behavior, seed=seed, n_features=n_features)
+    data, meta = generate_click_log(cfg)
+    train, val, test = split_sessions(data, (0.8, 0.1, 0.1), seed=seed)
+    return cfg, meta, train, val, test
+
+
+def train_gradient(model, train, val, *, lr=0.05, epochs=8, batch_size=4096,
+                   seed=0, weight_decay=0.0):
+    """Minibatch AdamW training; returns (params, seconds)."""
+    tx = optim.adamw(lr, weight_decay=weight_decay)
+    params = model.init(jax.random.PRNGKey(seed))
+    opt_state = tx.init(params)
+
+    @jax.jit
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(model.compute_loss)(params, batch)
+        updates, opt_state = tx.update(grads, opt_state, params)
+        return optim.apply_updates(params, updates), opt_state, loss
+
+    loader = ClickLogLoader(train, batch_size=batch_size, seed=seed)
+    t0 = time.time()
+    for _ in range(epochs):
+        for batch in iter(loader):
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            params, opt_state, _ = step(params, opt_state, batch)
+    jax.block_until_ready(params)
+    return params, time.time() - t0
+
+
+def evaluate_clicks(model, params, test, positions=10, batch_size=8192):
+    metrics = MultiMetric({"ll": LogLikelihood(), "ppl": Perplexity(),
+                           "cond_ppl": ConditionalPerplexity()})
+
+    @jax.jit
+    def update(params, state, batch):
+        lp = model.predict_clicks(params, batch)
+        clp = model.predict_conditional_clicks(params, batch)
+        return metrics.update(state, log_probs=lp, conditional_log_probs=clp,
+                              clicks=batch["clicks"], where=batch["mask"])
+
+    state = metrics.init_state(positions)
+    loader = ClickLogLoader(test, batch_size=batch_size, shuffle=False,
+                            drop_last=False)
+    n = 0
+    for batch in iter(loader):
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        state = update(params, state, batch)
+        n += 1
+    if n == 0:
+        raise ValueError("evaluation loader produced no batches")
+    return {k: float(v) for k, v in metrics.compute(state).items()}
+
+
+def timed(fn, *args, warmup=1, iters=5):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn(*args))
+    return out, (time.time() - t0) / iters

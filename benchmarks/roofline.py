@@ -1,0 +1,129 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh) cell, from experiments/dryrun/*.json:
+
+  compute term    = HLO_FLOPs / (chips * 197 TFLOP/s)      [bf16 MXU peak]
+  memory term     = HLO_bytes / (chips * 819 GB/s)         [HBM bandwidth]
+  collective term = wire_bytes / (chips * 50 GB/s)         [per-link ICI]
+
+cost_analysis() on this backend reports PER-DEVICE flops/bytes (verified),
+and the HLO collective parser reports per-device wire bytes — so each term is
+simply per_device_quantity / per_chip_rate. Also reported: dominant term,
+MODEL_FLOPS / HLO_FLOPs utilization ratio, and the suggested lever.
+
+    PYTHONPATH=src python -m benchmarks.roofline [--dir experiments/dryrun]
+        [--mesh pod16x16] [--markdown experiments/roofline.md]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12      # bf16 per chip (TPU v5e)
+HBM_BW = 819e9           # bytes/s per chip
+LINK_BW = 50e9           # bytes/s per ICI link (1-link model, see note)
+
+
+def load_records(dir_path: str, mesh: str | None = None):
+    records = []
+    for path in sorted(glob.glob(os.path.join(dir_path, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if mesh and rec["mesh"] != mesh:
+            continue
+        records.append(rec)
+    return records
+
+
+def analyze(rec: dict) -> dict:
+    chips = 512 if rec["mesh"] == "pod2x16x16" else 256
+    flops_dev = rec["cost"]["flops_per_device"]
+    bytes_dev = rec["cost"]["bytes_accessed_per_device"]
+    wire_dev = rec["collectives"]["total_wire_bytes_per_device"]
+    compute_t = flops_dev / PEAK_FLOPS
+    memory_t = bytes_dev / HBM_BW
+    coll_t = wire_dev / LINK_BW
+    terms = {"compute": compute_t, "memory": memory_t, "collective": coll_t}
+    dominant = max(terms, key=terms.get)
+    total_hlo_flops = flops_dev * chips
+    useful = rec["model_flops"] / total_hlo_flops if total_hlo_flops else 0.0
+    bound = max(terms.values())
+    # roofline fraction: useful work per second at the binding resource vs
+    # what pure peak-compute on the useful flops would take.
+    ideal_t = rec["model_flops"] / chips / PEAK_FLOPS
+    roofline_frac = ideal_t / bound if bound else 0.0
+    lever = {
+        "compute": "reduce redundant HLO flops (remat, fusion, dtype) or "
+                   "raise utilization of the MXU (bigger matmul tiles)",
+        "memory": "keep working sets resident (fusion/Pallas), shrink dtype, "
+                  "re-block to raise arithmetic intensity",
+        "collective": "reshard to cut wire bytes (reduce-scatter vs "
+                      "all-gather, shard_map psum of activations not tables, "
+                      "overlap collectives with compute)",
+    }[dominant]
+    return {
+        **{k: rec[k] for k in ("arch", "shape", "mesh", "kind", "model_flops")},
+        "chips": chips,
+        "compute_s": compute_t, "memory_s": memory_t, "collective_s": coll_t,
+        "dominant": dominant,
+        "useful_flops_ratio": useful,
+        "roofline_fraction": roofline_frac,
+        "peak_gib_per_dev": rec["memory"]["peak_bytes_per_device"] / 2**30,
+        "lever": lever,
+    }
+
+
+def format_table(rows, markdown=False):
+    hdr = ["arch", "shape", "mesh", "compute_s", "memory_s", "collective_s",
+           "dominant", "useful", "roofline%", "peakGiB"]
+    lines = []
+    if markdown:
+        lines.append("| " + " | ".join(hdr) + " |")
+        lines.append("|" + "|".join(["---"] * len(hdr)) + "|")
+    else:
+        lines.append(f"{'arch':26s} {'shape':14s} {'mesh':10s} "
+                     f"{'compute_s':>10s} {'memory_s':>10s} {'collect_s':>10s} "
+                     f"{'dom':>10s} {'useful':>7s} {'roof%':>6s} {'GiB':>6s}")
+    for r in rows:
+        vals = [r["arch"], r["shape"], r["mesh"],
+                f"{r['compute_s']:.3e}", f"{r['memory_s']:.3e}",
+                f"{r['collective_s']:.3e}", r["dominant"],
+                f"{r['useful_flops_ratio']:.3f}",
+                f"{100 * r['roofline_fraction']:.1f}",
+                f"{r['peak_gib_per_dev']:.2f}"]
+        if markdown:
+            lines.append("| " + " | ".join(vals) + " |")
+        else:
+            lines.append(f"{vals[0]:26s} {vals[1]:14s} {vals[2]:10s} "
+                         f"{vals[3]:>10s} {vals[4]:>10s} {vals[5]:>10s} "
+                         f"{vals[6]:>10s} {vals[7]:>7s} {vals[8]:>6s} "
+                         f"{vals[9]:>6s}")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--markdown", default=None)
+    args = ap.parse_args()
+    rows = [analyze(r) for r in load_records(args.dir, args.mesh)]
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    print(format_table(rows))
+    print("\nPer-cell dominant-term levers:")
+    for r in rows:
+        if r["mesh"] == "pod16x16":
+            print(f"  {r['arch']} x {r['shape']}: {r['dominant']}-bound -> "
+                  f"{r['lever']}")
+    if args.markdown:
+        os.makedirs(os.path.dirname(args.markdown), exist_ok=True)
+        with open(args.markdown, "w") as f:
+            f.write(format_table(rows, markdown=True) + "\n")
+        print(f"\n[roofline] wrote {args.markdown}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

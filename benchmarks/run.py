@@ -1,0 +1,86 @@
+"""Benchmark aggregator: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (quick modes sized for CPU), then
+each figure's detail table. The roofline table (dry-run-derived) is appended
+when experiments/dryrun/ exists.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale (slower) benchmark settings")
+    args = ap.parse_args()
+    quick = not args.full
+
+    csv_rows = []
+
+    from benchmarks import (bench_compression, bench_em_vs_grad,
+                            bench_features, bench_scale)
+
+    print("=" * 72)
+    print("Figure 1 — EM/MLE vs gradient-based optimization")
+    print("=" * 72)
+    t0 = time.time()
+    rows = bench_em_vs_grad.main(quick=quick)
+    for name, kind, secs, m in rows:
+        csv_rows.append((f"fig1/{name}/{kind}", secs * 1e6,
+                         f"ppl={m['ppl']:.4f}"))
+    print(f"[fig1 took {time.time() - t0:.0f}s]")
+
+    print("\n" + "=" * 72)
+    print("Figure 2 — embedding compression (hash / quotient-remainder)")
+    print("=" * 72)
+    t0 = time.time()
+    for compression, ratio, tau, ppl, secs in bench_compression.main(quick=quick):
+        csv_rows.append((f"fig2/{compression}/x{ratio:.0f}", secs * 1e6,
+                         f"kendall_tau={tau:.3f}"))
+    print(f"[fig2 took {time.time() - t0:.0f}s]")
+
+    print("\n" + "=" * 72)
+    print("Figure 3 — scaling to Baidu-ULTR-sized hashed tables")
+    print("=" * 72)
+    t0 = time.time()
+    for name, ids, secs, sps in bench_scale.main(quick=quick):
+        csv_rows.append((f"fig3/{name}/ids{ids}", secs * 1e6,
+                         f"sessions_per_s={sps:.0f}"))
+    print(f"[fig3 took {time.time() - t0:.0f}s]")
+
+    print("\n" + "=" * 72)
+    print("Figure 4 — feature parameterizations + mixture model")
+    print("=" * 72)
+    t0 = time.time()
+    for name, param, secs, m in bench_features.main(quick=quick):
+        csv_rows.append((f"fig4/{name}/{param}", secs * 1e6,
+                         f"ndcg10={m['ndcg@10']:.4f}"))
+    print(f"[fig4 took {time.time() - t0:.0f}s]")
+
+    if os.path.isdir("experiments/dryrun") and os.listdir("experiments/dryrun"):
+        print("\n" + "=" * 72)
+        print("Roofline (from multi-pod dry-run artifacts)")
+        print("=" * 72)
+        import sys
+
+        from benchmarks import roofline
+        argv = sys.argv
+        sys.argv = ["roofline", "--markdown", "experiments/roofline.md"]
+        try:
+            roofline.main()
+        finally:
+            sys.argv = argv
+
+    print("\n" + "=" * 72)
+    print("CSV: name,us_per_call,derived")
+    for name, us, derived in csv_rows:
+        print(f"{name},{us:.0f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

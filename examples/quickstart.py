@@ -1,0 +1,41 @@
+"""Quickstart — the paper's Listing 1: train a UBM with the CLAX Trainer.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro import optim
+from repro.core import UserBrowsingModel
+from repro.data import ClickLogLoader, SyntheticConfig, generate_click_log, split_sessions
+from repro.train import Trainer
+
+# 1. A click log (synthetic here; swap in your own padded session arrays).
+cfg = SyntheticConfig(n_sessions=30_000, n_queries=200, docs_per_query=15,
+                      positions=10, behavior="ubm", seed=0)
+data, _ = generate_click_log(cfg)
+train, val, test = split_sessions(data, (0.8, 0.1, 0.1), seed=0)
+
+# 2. Model + trainer (paper Listing 1: UBM over query-document ids).
+model = UserBrowsingModel(
+    query_doc_pairs=cfg.n_query_doc_pairs,
+    positions=10,
+    init_prob=1 / 9,
+)
+trainer = Trainer(
+    optimizer=optim.adamw(0.003, weight_decay=1e-4),
+    epochs=50,
+    patience=1,  # paper: stop after first epoch without val improvement
+)
+
+# 3. Train + test.
+history = trainer.train(model,
+                        ClickLogLoader(train, batch_size=2048, seed=0),
+                        ClickLogLoader(val, batch_size=8192, shuffle=False,
+                                 drop_last=False))
+results = trainer.test(model, ClickLogLoader(test, batch_size=8192, shuffle=False,
+                                             drop_last=False))
+print("\ntest metrics:")
+for k, v in results.items():
+    if k != "per_rank":
+        print(f"  {k}: {v:.4f}")
+print("  per-rank ppl:", [round(x, 3) for x in results["per_rank"]["ppl"]])

@@ -1,0 +1,63 @@
+"""Two-tower PBM — the paper's Listing 4: examination from a rank table,
+attraction from a DeepCrossV2 network over query-document features, trained
+end-to-end; compared against the naive DCTR (no bias correction) on ranking.
+
+    PYTHONPATH=src python examples/two_tower.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.core import (DeepCrossParameterConfig, DocumentCTR,
+                        PositionBasedModel, ndcg_metric)
+from repro.data import ClickLogLoader, SyntheticConfig, generate_click_log, split_sessions
+from repro.train import Trainer
+
+cfg = SyntheticConfig(n_sessions=30_000, n_queries=200, docs_per_query=15,
+                      positions=10, behavior="pbm", seed=1, n_features=16,
+                      exam_decay=0.6, ranker_noise=2.0)
+data, _ = generate_click_log(cfg)
+train, val, test = split_sessions(data, (0.8, 0.1, 0.1), seed=0)
+
+two_tower = PositionBasedModel(
+    positions=10,
+    attraction=DeepCrossParameterConfig(
+        use_feature="query_doc_features",
+        features=16,
+        cross_layers=2,
+        deep_layers=2,
+    ),
+)
+naive = DocumentCTR(
+    positions=10,
+    attraction=DeepCrossParameterConfig(
+        use_feature="query_doc_features", features=16,
+        cross_layers=2, deep_layers=2),
+)
+
+
+def ranking_ndcg(model, params):
+    batch = {k: jnp.asarray(v[:4096]) for k, v in test.items()
+             if k in ("positions", "query_doc_ids", "clicks", "mask",
+                      "query_doc_features")}
+    scores = model.predict_relevance(params, batch)
+    graded = jnp.clip((jnp.asarray(test["true_attractiveness"][:4096]) * 5)
+                      .astype(jnp.int32), 0, 4)
+    return float(ndcg_metric(scores, graded, where=batch["mask"], top_n=10))
+
+
+for name, model in [("two-tower PBM", two_tower), ("naive DCTR", naive)]:
+    trainer = Trainer(optim.adamw(0.01), epochs=20, patience=2,
+                      log_fn=lambda *_: None)
+    trainer.train(model, ClickLogLoader(train, batch_size=2048, seed=0),
+                  ClickLogLoader(val, batch_size=8192, shuffle=False,
+                                 drop_last=False))
+    results = trainer.test(model, ClickLogLoader(test, batch_size=8192, shuffle=False,
+                                                 drop_last=False),
+                           per_rank=False)
+    print(f"{name}: ppl={results['ppl']:.4f} "
+          f"ndcg@10={ranking_ndcg(model, trainer._final_state.params):.4f}")
+print("note: with strong informative features the nDCG gap narrows (paper "
+      "Fig.4 finds the same on Baidu-ULTR); the embedding-parameterized "
+      "grid in benchmarks/bench_features.py shows the bias-correction "
+      "ranking gap clearly.")

@@ -1,0 +1,4 @@
+"""Architecture configs: one module per assigned arch + the paper's own."""
+from repro.configs.registry import ARCHS, get_arch, list_cells
+
+__all__ = ["ARCHS", "get_arch", "list_cells"]

@@ -1,0 +1,69 @@
+"""Shared cell-building machinery for the dry-run / roofline harness.
+
+Every architecture module exposes:
+  * ``FULL``       — the exact published configuration,
+  * ``reduced()``  — a small same-family config for CPU smoke tests,
+  * ``SHAPES``     — its assigned input-shape set,
+  * ``build_cell(shape, mesh)`` -> :class:`Cell` — the jit-able function,
+    ShapeDtypeStruct args, shardings, and the analytic MODEL_FLOPS.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    kind: str                      # train | prefill | decode | serve | retrieval
+    fn: Callable                   # jit target
+    args: Tuple[Any, ...]          # ShapeDtypeStructs (+ static python values)
+    in_shardings: Any
+    out_shardings: Any
+    model_flops: float             # analytic useful FLOPs per call
+    notes: str = ""
+    donate: tuple = ()             # argnums to donate (params/opt/cache)
+
+
+def sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def named(mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def dp_axes(mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def dp_size(mesh) -> int:
+    out = 1
+    for a in dp_axes(mesh):
+        out *= mesh.shape[a]
+    return out
+
+
+def eval_shape_tree(fn, *args):
+    """Shapes of fn's params pytree without allocating (for init trees)."""
+    return jax.eval_shape(fn, *args)
+
+
+def divisible_batch_spec(mesh, batch: int) -> P:
+    """Batch dim over as many data axes as divide it (1 -> replicated)."""
+    axes = []
+    remaining = batch
+    for a in dp_axes(mesh):
+        size = mesh.shape[a]
+        if remaining % size == 0:
+            axes.append(a)
+            remaining //= size
+    return P(tuple(axes)) if axes else P(None)

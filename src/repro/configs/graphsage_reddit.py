@@ -1,0 +1,173 @@
+"""graphsage-reddit [gnn] n_layers=2 d_hidden=128 aggregator=mean
+sample_sizes=25-10 [arXiv:1706.02216; paper].
+
+Shapes:
+  full_graph_sm  Cora-scale full-batch (2708 nodes / 10556 edges / 1433 feats)
+  minibatch_lg   Reddit sampled-training (232965 nodes, batch 1024, fanout 15-10)
+  ogb_products   full-batch-large (2.45M nodes / 61.9M edges / 100 feats)
+  molecule       128 batched 30-node graphs (graph classification)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import optim as optim_lib
+from repro.configs.common import Cell, dp_axes, named, sds
+from repro.models.gnn import (SAGEConfig, init_params, make_full_graph_train_step,
+                              make_sampled_train_step)
+from repro.models.gnn.graphsage import (full_graph_forward,
+                                        node_classification_loss)
+
+FULL = SAGEConfig(name="graphsage-reddit", n_layers=2, d_in=602, d_hidden=128,
+                  n_classes=41, sample_sizes=(25, 10))
+
+SHAPES = {
+    "full_graph_sm": dict(n_nodes=2708, n_edges=10556, d_feat=1433,
+                          n_classes=7, kind="full"),
+    "minibatch_lg": dict(n_nodes=232965, n_edges=114615892, batch_nodes=1024,
+                         fanout=(15, 10), d_feat=602, n_classes=41,
+                         kind="sampled"),
+    "ogb_products": dict(n_nodes=2449029, n_edges=61859140, d_feat=100,
+                         n_classes=47, kind="full"),
+    "molecule": dict(n_nodes=30, n_edges=64, batch=128, d_feat=32,
+                     n_classes=2, kind="molecule"),
+}
+
+
+def reduced() -> SAGEConfig:
+    return SAGEConfig(name="graphsage-smoke", n_layers=2, d_in=16,
+                      d_hidden=32, n_classes=5, sample_sizes=(5, 3))
+
+
+def _pad_edges(n_edges: int, mesh) -> int:
+    n_dev = 1
+    for a in mesh.axis_names:
+        n_dev *= mesh.shape[a]
+    return -(-n_edges // n_dev) * n_dev
+
+
+def _params_opt(cfg, optimizer):
+    params = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    opt_state = jax.eval_shape(optimizer.init, params)
+    pspecs = jax.tree_util.tree_map(lambda _: P(), params)
+    ospecs = jax.tree_util.tree_map(lambda _: P(), opt_state)
+    return params, opt_state, pspecs, ospecs
+
+
+def _flops_full(cfg, n_nodes, n_edges, d_feat):
+    dims = [d_feat] + [cfg.d_hidden] * (cfg.n_layers - 1) + [cfg.n_classes]
+    total = 0.0
+    for l in range(cfg.n_layers):
+        total += 2.0 * 2 * n_nodes * dims[l] * dims[l + 1]  # self + neigh matmuls
+        total += 2.0 * n_edges * dims[l]                    # gather-adds
+    return 3 * total  # fwd + bwd(2x)
+
+
+def build_cell(shape: str, mesh) -> Cell:
+    info = SHAPES[shape]
+    all_axes = tuple(mesh.axis_names)
+    optimizer = optim_lib.adam(1e-2)
+
+    if info["kind"] in ("full", "molecule"):
+        if info["kind"] == "molecule":
+            n_nodes = info["n_nodes"] * info["batch"]
+            n_edges_raw = info["n_edges"] * info["batch"]
+            n_classes = info["n_classes"]
+        else:
+            n_nodes, n_edges_raw = info["n_nodes"], info["n_edges"]
+            n_classes = info["n_classes"]
+        cfg = SAGEConfig(name=FULL.name, n_layers=FULL.n_layers,
+                         d_in=info["d_feat"], d_hidden=FULL.d_hidden,
+                         n_classes=n_classes, sample_sizes=FULL.sample_sizes)
+        n_edges = _pad_edges(n_edges_raw, mesh)
+        graph = {
+            "features": sds((n_nodes, info["d_feat"]), jnp.float32),
+            "src": sds((n_edges,), jnp.int32),
+            "dst": sds((n_edges,), jnp.int32),
+            "edge_weight": sds((n_edges,), jnp.float32),
+            "degree_inv": sds((n_nodes,), jnp.float32),
+            "labels": sds((n_nodes,), jnp.int32),
+        }
+        gspecs = {
+            "features": P(None, None), "src": P(all_axes), "dst": P(all_axes),
+            "edge_weight": P(all_axes), "degree_inv": P(None),
+            "labels": P(None),
+        }
+        if info["kind"] == "molecule":
+            graph["graph_ids"] = sds((n_nodes,), jnp.int32)
+            gspecs["graph_ids"] = P(None)
+            fn = _make_molecule_step(cfg, optimizer, mesh, info["batch"])
+        else:
+            fn = make_full_graph_train_step(cfg, optimizer, mesh)
+        params, opt_state, pspecs, ospecs = _params_opt(cfg, optimizer)
+        return Cell(
+            arch=FULL.name, shape=shape, kind="train", fn=fn,
+            args=(params, opt_state, graph),
+            in_shardings=(named(mesh, pspecs), named(mesh, ospecs),
+                          named(mesh, gspecs)),
+            out_shardings=(named(mesh, pspecs), named(mesh, ospecs),
+                           named(mesh, P())),
+            model_flops=_flops_full(cfg, n_nodes, n_edges_raw, info["d_feat"]),
+            donate=(0, 1),
+            notes=f"edges padded {n_edges_raw}->{n_edges}, sharded over "
+                  f"{all_axes}; nodes replicated + psum",
+        )
+
+    # sampled minibatch (Reddit)
+    cfg = SAGEConfig(name=FULL.name, n_layers=FULL.n_layers,
+                     d_in=info["d_feat"], d_hidden=FULL.d_hidden,
+                     n_classes=info["n_classes"],
+                     sample_sizes=info["fanout"])
+    B = info["batch_nodes"]
+    f1, f2 = info["fanout"]
+    dp = dp_axes(mesh)
+    batch = {
+        "feats_hop_0": sds((B, info["d_feat"]), jnp.float32),
+        "feats_hop_1": sds((B, f1, info["d_feat"]), jnp.float32),
+        "feats_hop_2": sds((B, f1, f2, info["d_feat"]), jnp.float32),
+        "labels": sds((B,), jnp.int32),
+    }
+    bspecs = {
+        "feats_hop_0": P(dp, None), "feats_hop_1": P(dp, None, None),
+        "feats_hop_2": P(dp, None, None, None), "labels": P(dp),
+    }
+    fn = make_sampled_train_step(cfg, optimizer)
+    params, opt_state, pspecs, ospecs = _params_opt(cfg, optimizer)
+    gathered = B * (1 + f1 + f1 * f2)
+    flops = 3 * (2.0 * 2 * gathered * info["d_feat"] * cfg.d_hidden
+                 + 2.0 * 2 * B * cfg.d_hidden * cfg.n_classes)
+    return Cell(
+        arch=FULL.name, shape=shape, kind="train", fn=fn,
+        args=(params, opt_state, batch),
+        in_shardings=(named(mesh, pspecs), named(mesh, ospecs),
+                      named(mesh, bspecs)),
+        out_shardings=(named(mesh, pspecs), named(mesh, ospecs),
+                       named(mesh, P())),
+        model_flops=flops,
+        donate=(0, 1),
+        notes=f"host NeighborSampler feeds fixed fanout {info['fanout']}",
+    )
+
+
+def _make_molecule_step(cfg, optimizer, mesh, n_graphs):
+    def step(params, opt_state, graph):
+        def loss_fn(p):
+            node_logits = full_graph_forward(cfg, p, graph, mesh)
+            pooled = jax.ops.segment_sum(node_logits, graph["graph_ids"],
+                                         num_segments=n_graphs)
+            counts = jax.ops.segment_sum(
+                jnp.ones_like(graph["graph_ids"], jnp.float32),
+                graph["graph_ids"], num_segments=n_graphs)
+            pooled = pooled / jnp.maximum(counts[:, None], 1.0)
+            labels = graph["labels"][::graph["labels"].shape[0] // n_graphs]
+            return node_classification_loss(pooled, labels[:n_graphs])
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        return optim_lib.apply_updates(params, updates), opt_state, loss
+
+    return step

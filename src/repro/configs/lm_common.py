@@ -1,0 +1,130 @@
+"""Shared cell builder for the LM-family architectures (5 archs x 4 shapes).
+
+Shapes (assigned set):
+  train_4k     seq 4096,   global_batch 256  -> train_step (AdamW, microbatched)
+  prefill_32k  seq 32768,  global_batch 32   -> prefill (logits + KV cache out)
+  decode_32k   seq 32768,  global_batch 128  -> serve_step (1 new token vs cache)
+  long_500k    seq 524288, global_batch 1    -> serve_step (decode is O(S), so
+               full-attention archs run it; see DESIGN.md long_500k note)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import optim as optim_lib
+from repro.configs.common import Cell, dp_axes, named, sds
+from repro.models.lm import (LMConfig, cache_specs, forward, init_cache,
+                             init_params, make_decode_step, make_prefill_step,
+                             make_train_step, param_specs)
+
+SHAPES = {
+    "train_4k": dict(seq=4096, batch=256, kind="train"),
+    "prefill_32k": dict(seq=32768, batch=32, kind="prefill"),
+    "decode_32k": dict(seq=32768, batch=128, kind="decode"),
+    "long_500k": dict(seq=524288, batch=1, kind="decode"),
+}
+
+
+def _attn_flops(cfg: LMConfig, batch: int, seq: int, causal: bool) -> float:
+    per_layer = 4.0 * batch * seq * seq * cfg.n_heads * cfg.head_dim
+    if causal:
+        per_layer /= 2
+    return per_layer * cfg.n_layers
+
+
+def _params_sds(cfg: LMConfig):
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def _opt_specs(pspecs):
+    from repro.optim.optimizers import ScaleByAdamState
+
+    return (ScaleByAdamState(count=P(), mu=pspecs, nu=pspecs), (), ())
+
+
+def build_lm_cell(cfg: LMConfig, shape: str, mesh) -> Cell:
+    info = SHAPES[shape]
+    B, S = info["batch"], info["seq"]
+    dp = dp_axes(mesh)
+    pspecs = param_specs(cfg, mesh)
+    params = _params_sds(cfg)
+
+    if info["kind"] == "train":
+        optimizer = optim_lib.adamw(3e-4, moment_dtype=cfg.opt_dtype)
+        opt_state = jax.eval_shape(optimizer.init, params)
+        ospecs = _opt_specs(pspecs)
+        batch = {"tokens": sds((B, S), jnp.int32),
+                 "targets": sds((B, S), jnp.int32)}
+        bspecs = {"tokens": P(dp, None), "targets": P(dp, None)}
+        fn = make_train_step(cfg, optimizer, mesh)
+        return Cell(
+            arch=cfg.name, shape=shape, kind="train", fn=fn,
+            args=(params, opt_state, batch),
+            in_shardings=(named(mesh, pspecs), named(mesh, ospecs),
+                          named(mesh, bspecs)),
+            out_shardings=(named(mesh, pspecs), named(mesh, ospecs),
+                           named(mesh, P())),
+            model_flops=6.0 * cfg.active_param_count() * B * S
+            + 3 * _attn_flops(cfg, B, S, causal=True),
+            donate=(0, 1),
+            notes=f"microbatches={cfg.microbatches} scan_chunks={cfg.scan_chunks}",
+        )
+
+    if info["kind"] == "prefill":
+        tokens = sds((B, S), jnp.int32)
+        fn = make_prefill_step(cfg, mesh)
+        cspecs = {"k": P(None, None, dp, "model", None, None),
+                  "v": P(None, None, dp, "model", None, None)}
+        return Cell(
+            arch=cfg.name, shape=shape, kind="prefill", fn=fn,
+            args=(params, tokens),
+            in_shardings=(named(mesh, pspecs), named(mesh, P(dp, None))),
+            out_shardings=(named(mesh, P(dp, None, "model")),
+                           named(mesh, cspecs)),
+            model_flops=2.0 * cfg.active_param_count() * B * S
+            + _attn_flops(cfg, B, S, causal=True),
+            notes="emits KV cache + last-position logits only",
+        )
+
+    # decode
+    import dataclasses as _dc
+
+    batch_shardable = B % (mesh.shape.get("data", 1) *
+                           mesh.shape.get("pod", 1)) == 0
+    dec_dp = dp if batch_shardable else ()
+    seq_axes = ("model",) if batch_shardable else tuple(mesh.axis_names)
+    cfg = _dc.replace(cfg, decode_seq_axes=seq_axes)
+    cache = {
+        "k": sds((cfg.n_units, cfg.layers_per_unit, B, S,
+                  cfg.n_kv_heads, cfg.head_dim), cfg.dtype),
+        "v": sds((cfg.n_units, cfg.layers_per_unit, B, S,
+                  cfg.n_kv_heads, cfg.head_dim), cfg.dtype),
+    }
+    cspec = P(None, None, dec_dp if dec_dp else None, seq_axes, None, None)
+    cspecs = {"k": cspec, "v": cspec}
+    tokens = sds((B, 1), jnp.int32)
+    index = sds((), jnp.int32)
+    fn = make_decode_step(cfg, mesh, dp_axes=dec_dp)
+    tok_spec = P(dec_dp if dec_dp else None, None)
+    return Cell(
+        arch=cfg.name, shape=shape, kind="decode", fn=fn,
+        args=(params, cache, tokens, index),
+        in_shardings=(named(mesh, pspecs), named(mesh, cspecs),
+                      named(mesh, tok_spec), named(mesh, P())),
+        out_shardings=(named(mesh, P(tok_spec[0], None, "model")),
+                       named(mesh, cspecs)),
+        model_flops=2.0 * cfg.active_param_count() * B
+        + 4.0 * B * S * cfg.n_heads * cfg.head_dim * cfg.n_layers,
+        donate=(1,),
+        notes=f"KV cache {S} tokens; seq sharded over {seq_axes}",
+    )
+
+
+def lm_smoke_batch(cfg: LMConfig, batch: int = 2, seq: int = 16):
+    tok = jax.random.randint(jax.random.PRNGKey(0), (batch, seq), 0, cfg.vocab)
+    return {"tokens": tok, "targets": tok}

@@ -1,0 +1,31 @@
+"""mind [recsys] embed_dim=64 n_interests=4 capsule_iters=3
+interaction=multi-interest [arXiv:1904.08030; unverified]."""
+from repro.configs.recsys_common import SHAPES, build_recsys_cell, sequence_batch_factory
+from repro.models.recsys import MIND, MINDConfig
+
+FULL = MINDConfig(name="mind", embed_dim=64, n_interests=4, capsule_iters=3,
+                  history_len=50, item_vocab=10_000_000)
+
+
+def reduced() -> MINDConfig:
+    return MINDConfig(name="mind-smoke", embed_dim=8, n_interests=2,
+                      capsule_iters=2, history_len=10, item_vocab=500)
+
+
+def _flops_per_example(cfg: MINDConfig) -> float:
+    L, D, K = cfg.history_len, cfg.embed_dim, cfg.n_interests
+    bilinear = 2.0 * L * D * D
+    routing = cfg.capsule_iters * (2 * 2.0 * L * K * D)
+    label_aware = 2.0 * K * D
+    return bilinear + routing + label_aware
+
+
+def build_cell(shape: str, mesh):
+    model = MIND(FULL)
+    f = _flops_per_example(FULL)
+    return build_recsys_cell(
+        model, shape, mesh,
+        batch_factory=sequence_batch_factory(FULL.history_len),
+        flops_per_example=f,
+        retrieval_flops=f + 2.0 * 1_000_000 * FULL.n_interests * FULL.embed_dim,
+        arch_name=FULL.name)

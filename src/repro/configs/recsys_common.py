@@ -1,0 +1,130 @@
+"""Shared cell builder for the recsys archs (4 archs x 4 shapes).
+
+Shapes: train_batch (65536, training), serve_p99 (512, online),
+serve_bulk (262144, offline scoring), retrieval_cand (1 query x 1M candidates).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import optim as optim_lib
+from repro.configs.common import Cell, dp_axes, named, sds
+
+SHAPES = {
+    "train_batch": dict(batch=65536, kind="train"),
+    "serve_p99": dict(batch=512, kind="serve"),
+    "serve_bulk": dict(batch=262144, kind="serve"),
+    "retrieval_cand": dict(batch=1, n_candidates=1_000_000, kind="retrieval"),
+}
+
+
+def build_recsys_cell(model, shape: str, mesh, *, batch_factory: Callable,
+                      flops_per_example: float, retrieval_flops: float,
+                      arch_name: str) -> Cell:
+    info = SHAPES[shape]
+    dp = dp_axes(mesh)
+    pspecs = model.param_specs(mesh)
+    params = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+
+    batch, bspecs = batch_factory(info, dp)
+
+    if info["kind"] == "train":
+        optimizer = optim_lib.adamw(1e-3)
+        opt_state = jax.eval_shape(optimizer.init, params)
+        from repro.optim.optimizers import ScaleByAdamState
+        ospecs = (ScaleByAdamState(count=P(), mu=pspecs, nu=pspecs), (), ())
+        fn = model.make_train_step(optimizer)
+        return Cell(
+            arch=arch_name, shape=shape, kind="train", fn=fn,
+            args=(params, opt_state, batch),
+            in_shardings=(named(mesh, pspecs), named(mesh, ospecs),
+                          named(mesh, bspecs)),
+            out_shardings=(named(mesh, pspecs), named(mesh, ospecs),
+                           named(mesh, P())),
+            model_flops=3.0 * flops_per_example * info["batch"],
+            donate=(0, 1),
+            notes="tables row-sharded over 'model'; towers replicated",
+        )
+
+    if info["kind"] == "serve":
+        fn = model.serve
+        out_spec = P(dp) if info["batch"] % _dp_size(mesh) == 0 else P(None)
+        return Cell(
+            arch=arch_name, shape=shape, kind="serve", fn=fn,
+            args=(params, batch),
+            in_shardings=(named(mesh, pspecs), named(mesh, bspecs)),
+            out_shardings=named(mesh, out_spec),
+            model_flops=flops_per_example * info["batch"],
+            notes="forward only",
+        )
+
+    # retrieval
+    fn = model.retrieval_score
+    out_shape = jax.eval_shape(fn, params, batch)
+    out_spec = jax.tree_util.tree_map(
+        lambda s: P(tuple(dp) if s.shape and s.shape[0] % _dp_size(mesh) == 0
+                    else None, *([None] * (max(len(s.shape) - 1, 0)))),
+        out_shape)
+    return Cell(
+        arch=arch_name, shape=shape, kind="retrieval", fn=fn,
+        args=(params, batch),
+        in_shardings=(named(mesh, pspecs), named(mesh, bspecs)),
+        out_shardings=named(mesh, out_spec),
+        model_flops=retrieval_flops,
+        notes="single batched program over 1M candidates (no host loop)",
+    )
+
+
+def _dp_size(mesh) -> int:
+    out = 1
+    for a in dp_axes(mesh):
+        out *= mesh.shape[a]
+    return out
+
+
+def tabular_batch_factory(n_fields: int):
+    """deepfm / autoint: (B, n_fields) ids + labels; retrieval expands the
+    candidate rows into the field matrix (one batched forward)."""
+    def factory(info, dp):
+        if info["kind"] == "retrieval":
+            C = info["n_candidates"]
+            batch = {"field_ids": sds((C, n_fields), jnp.int32)}
+            bspecs = {"field_ids": P(dp, None)}
+            return batch, bspecs
+        B = info["batch"]
+        batch = {"field_ids": sds((B, n_fields), jnp.int32)}
+        bspecs = {"field_ids": P(dp, None)}
+        if info["kind"] == "train":
+            batch["labels"] = sds((B,), jnp.float32)
+            bspecs["labels"] = P(dp)
+        return batch, bspecs
+
+    return factory
+
+
+def sequence_batch_factory(history_len: int, with_target: bool = True):
+    """bst / mind: history ids + target id; retrieval = 1 user x candidates."""
+    def factory(info, dp):
+        if info["kind"] == "retrieval":
+            batch = {
+                "history_ids": sds((1, history_len), jnp.int32),
+                "candidate_ids": sds((info["n_candidates"],), jnp.int32),
+            }
+            bspecs = {"history_ids": P(None, None), "candidate_ids": P(dp)}
+            return batch, bspecs
+        B = info["batch"]
+        batch = {"history_ids": sds((B, history_len), jnp.int32)}
+        bspecs = {"history_ids": P(dp, None)}
+        if with_target:
+            batch["target_ids"] = sds((B,), jnp.int32)
+            bspecs["target_ids"] = P(dp)
+        if info["kind"] == "train":
+            batch["labels"] = sds((B,), jnp.float32)
+            bspecs["labels"] = P(dp)
+        return batch, bspecs
+
+    return factory

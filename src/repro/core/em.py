@@ -1,0 +1,198 @@
+"""EM / MLE reference optimizers (the PyClick-style baselines of §3 & §7).
+
+These full-batch estimators are what CLAX replaces with SGD. We keep them as
+(a) correctness oracles — gradient training must reach the same fit — and
+(b) the speed baseline in ``benchmarks/bench_em_vs_grad.py`` (Figure 1).
+
+All estimators consume flat padded arrays: positions (B,K) 1-based, doc ids
+(B,K), clicks (B,K), mask (B,K). Fitted probabilities can be injected into the
+matching CLAX model's embedding tables via :func:`to_logits` so both pipelines
+share evaluation code.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+EPS = 1e-8
+
+
+def to_logits(p: jax.Array) -> jax.Array:
+    p = jnp.clip(p, EPS, 1.0 - EPS)
+    return jnp.log(p) - jnp.log1p(-p)
+
+
+def _flatten(batch):
+    pos = batch["positions"].reshape(-1) - 1  # 0-based ranks
+    docs = batch["query_doc_ids"].reshape(-1)
+    clicks = batch["clicks"].reshape(-1).astype(jnp.float32)
+    mask = batch["mask"].reshape(-1).astype(jnp.float32)
+    return pos, docs, clicks, mask
+
+
+# ---------------------------------------------------------------------------
+# MLE (counting) estimators for CTR models — PyClick's fast path.
+# ---------------------------------------------------------------------------
+
+def fit_gctr(batch) -> jax.Array:
+    _, _, clicks, mask = _flatten(batch)
+    return jnp.sum(clicks * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def fit_rctr(batch, positions: int) -> jax.Array:
+    pos, _, clicks, mask = _flatten(batch)
+    num = jax.ops.segment_sum(clicks * mask, pos, num_segments=positions)
+    den = jax.ops.segment_sum(mask, pos, num_segments=positions)
+    return num / jnp.maximum(den, 1.0)
+
+
+def fit_dctr(batch, n_docs: int, prior: float = 0.5, prior_weight: float = 0.0):
+    """Per-document CTR with optional Beta-prior smoothing."""
+    _, docs, clicks, mask = _flatten(batch)
+    num = jax.ops.segment_sum(clicks * mask, docs, num_segments=n_docs)
+    den = jax.ops.segment_sum(mask, docs, num_segments=n_docs)
+    return (num + prior * prior_weight) / jnp.maximum(den + prior_weight, EPS)
+
+
+def fit_sdbn_mle(batch, n_docs: int):
+    """SDBN MLE counting (PyClick's fast path): within each session, items at
+    or before the LAST click are certainly examined, so
+      attractiveness_d = clicks(d) / impressions-at-or-before-last-click(d)
+      satisfaction_d   = last-clicks(d) / clicks(d).
+    Returns (gamma[n_docs], sigma[n_docs])."""
+    positions = batch["positions"]
+    clicks = batch["clicks"].astype(jnp.float32)
+    mask = batch["mask"].astype(jnp.float32)
+    docs = batch["query_doc_ids"].reshape(-1)
+    clicked_rank = jnp.where(clicks > 0, positions, 0)
+    last_rank = jnp.max(clicked_rank, axis=1, keepdims=True)  # (B, 1)
+    examined = ((positions <= last_rank) & (last_rank > 0)).astype(jnp.float32)
+    examined = (examined * mask).reshape(-1)
+    c = (clicks * mask).reshape(-1)
+    is_last = ((clicked_rank == last_rank) & (clicks > 0)).astype(jnp.float32)
+    is_last = (is_last * mask).reshape(-1)
+    imp = jax.ops.segment_sum(examined, docs, num_segments=n_docs)
+    clk = jax.ops.segment_sum(c, docs, num_segments=n_docs)
+    lst = jax.ops.segment_sum(is_last, docs, num_segments=n_docs)
+    gamma = clk / jnp.maximum(imp, 1.0)
+    sigma = lst / jnp.maximum(clk, 1.0)
+    return gamma, sigma
+
+
+def sdbn_params_from_mle(gamma, sigma) -> Dict:
+    return {
+        "attraction": {"table": to_logits(gamma)[:, None]},
+        "satisfaction": {"table": to_logits(sigma)[:, None]},
+    }
+
+
+# ---------------------------------------------------------------------------
+# PBM expectation-maximization (paper Eqs. 3-6).
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("positions", "n_docs"))
+def _pbm_em_iteration(theta, gamma, pos, docs, clicks, mask, *, positions, n_docs):
+    th = theta[pos]
+    ga = gamma[docs]
+    denom = jnp.maximum(1.0 - th * ga, EPS)
+    # E-step (Eqs. 3-4)
+    e_hat = clicks + (1.0 - clicks) * th * (1.0 - ga) / denom
+    a_hat = clicks + (1.0 - clicks) * ga * (1.0 - th) / denom
+    # M-step (Eq. 6)
+    theta_new = (jax.ops.segment_sum(e_hat * mask, pos, num_segments=positions)
+                 / jnp.maximum(jax.ops.segment_sum(mask, pos, num_segments=positions), EPS))
+    gamma_new = (jax.ops.segment_sum(a_hat * mask, docs, num_segments=n_docs)
+                 / jnp.maximum(jax.ops.segment_sum(mask, docs, num_segments=n_docs), EPS))
+    return theta_new, gamma_new
+
+
+def fit_pbm_em(batch, positions: int, n_docs: int, n_iters: int = 50,
+               init: float = 0.5) -> Tuple[jax.Array, jax.Array]:
+    """Returns (theta[positions], gamma[n_docs]) in probability space."""
+    pos, docs, clicks, mask = _flatten(batch)
+    theta = jnp.full((positions,), init, jnp.float32)
+    gamma = jnp.full((n_docs,), init, jnp.float32)
+    for _ in range(n_iters):
+        theta, gamma = _pbm_em_iteration(theta, gamma, pos, docs, clicks, mask,
+                                         positions=positions, n_docs=n_docs)
+    return theta, gamma
+
+
+# ---------------------------------------------------------------------------
+# UBM expectation-maximization. E-step conditions on the observed last click
+# (standard Chuklin et al. derivation); theta is indexed by the pair
+# (rank k, last-click rank k') with k' = 0 meaning "no previous click".
+# ---------------------------------------------------------------------------
+
+def _last_click_flat(batch):
+    clicks = batch["clicks"]
+    positions = batch["positions"]
+    clicked_rank = jnp.where(clicks > 0, positions, 0)
+    cummax = jax.lax.associative_scan(jnp.maximum, clicked_rank, axis=1)
+    exclusive = jnp.concatenate([jnp.zeros_like(cummax[:, :1]), cummax[:, :-1]], axis=1)
+    return exclusive.reshape(-1)  # 1-based rank of last click, 0 = none
+
+
+@partial(jax.jit, static_argnames=("positions", "n_docs"))
+def _ubm_em_iteration(theta, gamma, pair_idx, docs, clicks, mask, *, positions, n_docs):
+    th = theta.reshape(-1)[pair_idx]
+    ga = gamma[docs]
+    denom = jnp.maximum(1.0 - th * ga, EPS)
+    e_hat = clicks + (1.0 - clicks) * th * (1.0 - ga) / denom
+    a_hat = clicks + (1.0 - clicks) * ga * (1.0 - th) / denom
+    n_pairs = positions * positions
+    theta_new = (jax.ops.segment_sum(e_hat * mask, pair_idx, num_segments=n_pairs)
+                 / jnp.maximum(jax.ops.segment_sum(mask, pair_idx, num_segments=n_pairs), EPS))
+    # Unobserved (k, k') pairs keep their previous value instead of collapsing.
+    counts = jax.ops.segment_sum(mask, pair_idx, num_segments=n_pairs)
+    theta_new = jnp.where(counts > 0, theta_new, theta.reshape(-1))
+    gamma_new = (jax.ops.segment_sum(a_hat * mask, docs, num_segments=n_docs)
+                 / jnp.maximum(jax.ops.segment_sum(mask, docs, num_segments=n_docs), EPS))
+    return theta_new.reshape(positions, positions), gamma_new
+
+
+def fit_ubm_em(batch, positions: int, n_docs: int, n_iters: int = 50,
+               init: float = 0.5) -> Tuple[jax.Array, jax.Array]:
+    """Returns (theta[K, K] indexed [rank-1, last-click-rank], gamma[n_docs])."""
+    pos, docs, clicks, mask = _flatten(batch)
+    last = _last_click_flat(batch)
+    pair_idx = pos * positions + jnp.clip(last, 0, positions - 1).astype(pos.dtype)
+    theta = jnp.full((positions, positions), init, jnp.float32)
+    gamma = jnp.full((n_docs,), init, jnp.float32)
+    for _ in range(n_iters):
+        theta, gamma = _ubm_em_iteration(theta, gamma, pair_idx, docs, clicks, mask,
+                                         positions=positions, n_docs=n_docs)
+    return theta, gamma
+
+
+# ---------------------------------------------------------------------------
+# Injection helpers: EM/MLE fits -> CLAX model params for shared evaluation.
+# ---------------------------------------------------------------------------
+
+def pbm_params_from_em(theta, gamma) -> Dict:
+    return {
+        "attraction": {"table": to_logits(gamma)[:, None]},
+        "examination": {"table": to_logits(theta)},
+    }
+
+
+def ubm_params_from_em(theta, gamma) -> Dict:
+    return {
+        "attraction": {"table": to_logits(gamma)[:, None]},
+        "examination": {"table": to_logits(theta)},
+    }
+
+
+def dctr_params_from_mle(ctr) -> Dict:
+    return {"attraction": {"table": to_logits(ctr)[:, None]}}
+
+
+def rctr_params_from_mle(ctr) -> Dict:
+    return {"theta": {"table": to_logits(ctr)}}
+
+
+def gctr_params_from_mle(ctr) -> Dict:
+    return {"rho": {"value": to_logits(ctr)}}

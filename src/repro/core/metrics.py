@@ -1,0 +1,224 @@
+"""Click-prediction + ranking metrics (paper §4.4), mask-aware and batched.
+
+Click metrics are streaming accumulators: ``state = metric.init_state(K)``,
+``state = metric.update(state, **batch_outputs)``, ``metric.compute(state)``.
+``MultiMetric`` routes inputs by name so all metrics update in one call
+(paper Listing 6). Ranking metrics are pure functions in the Rax style
+(paper Listing 7): ``metric(scores, labels, where=mask, top_n=...)``.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.stable import log1mexp
+
+LOG2 = 0.6931471805599453
+
+
+def _bce_bits(log_probs, clicks):
+    """Per-item log2-loss: -[c log2 p + (1-c) log2 (1-p)]."""
+    clicks = clicks.astype(log_probs.dtype)
+    ll = clicks * log_probs + (1.0 - clicks) * log1mexp(log_probs)
+    return -ll / LOG2
+
+
+class _StreamingMetric:
+    """Accumulates per-rank (sum, count) to support global + per-rank views."""
+
+    requires = ("log_probs", "clicks", "where")
+    use_log2 = False
+    negate = False
+
+    def init_state(self, positions: int):
+        return {
+            "sum": jnp.zeros((positions,), jnp.float64 if jax.config.jax_enable_x64
+                             else jnp.float32),
+            "count": jnp.zeros((positions,), jnp.float32),
+        }
+
+    def _values(self, **kwargs):
+        raise NotImplementedError
+
+    def update(self, state, **kwargs):
+        where = kwargs.get("where")
+        values = self._values(**kwargs)
+        if where is None:
+            where = jnp.ones_like(values, dtype=bool)
+        w = where.astype(values.dtype)
+        return {
+            "sum": state["sum"] + jnp.sum(values * w, axis=0),
+            "count": state["count"] + jnp.sum(w, axis=0),
+        }
+
+    def compute(self, state):
+        mean = jnp.sum(state["sum"]) / jnp.maximum(jnp.sum(state["count"]), 1.0)
+        return self._finalize(mean)
+
+    def compute_per_rank(self, state):
+        mean = state["sum"] / jnp.maximum(state["count"], 1.0)
+        return self._finalize(mean)
+
+    def _finalize(self, mean):
+        return mean
+
+
+class LogLikelihood(_StreamingMetric):
+    """Eq. 13: mean conditional log-likelihood (higher = better)."""
+
+    requires = ("conditional_log_probs", "clicks", "where")
+
+    def _values(self, conditional_log_probs=None, clicks=None, **_):
+        clicks = clicks.astype(conditional_log_probs.dtype)
+        return (clicks * conditional_log_probs
+                + (1.0 - clicks) * log1mexp(conditional_log_probs))
+
+
+class Perplexity(_StreamingMetric):
+    """Eq. 14 with unconditional click predictions."""
+
+    requires = ("log_probs", "clicks", "where")
+
+    def _values(self, log_probs=None, clicks=None, **_):
+        return _bce_bits(log_probs, clicks)
+
+    def _finalize(self, mean):
+        return jnp.exp2(mean)
+
+
+class ConditionalPerplexity(_StreamingMetric):
+    """Eq. 14 with conditional click predictions."""
+
+    requires = ("conditional_log_probs", "clicks", "where")
+
+    def _values(self, conditional_log_probs=None, clicks=None, **_):
+        return _bce_bits(conditional_log_probs, clicks)
+
+    def _finalize(self, mean):
+        return jnp.exp2(mean)
+
+
+class MultiMetric:
+    """Bundle of named metrics with automatic input routing (Listing 6)."""
+
+    def __init__(self, metrics: Dict[str, object]):
+        self.metrics = dict(metrics)
+
+    def init_state(self, positions: int):
+        return {name: m.init_state(positions) for name, m in self.metrics.items()}
+
+    def update(self, state, **kwargs):
+        out = {}
+        for name, metric in self.metrics.items():
+            routed = {k: v for k, v in kwargs.items() if k in metric.requires}
+            out[name] = metric.update(state[name], **routed)
+        return out
+
+    def compute(self, state):
+        return {name: m.compute(state[name]) for name, m in self.metrics.items()}
+
+    def compute_per_rank(self, state):
+        return {name: m.compute_per_rank(state[name])
+                for name, m in self.metrics.items()}
+
+
+# ---------------------------------------------------------------------------
+# Ranking metrics (Rax-style pure functions).
+# ---------------------------------------------------------------------------
+
+def _rank_by_score(scores, where):
+    """Ranks (1-based) of each item when sorted by descending score."""
+    scores = jnp.where(where, scores, -jnp.inf)
+    order = jnp.argsort(-scores, axis=-1)
+    ranks = jnp.empty_like(order)
+    ranks = jnp.take_along_axis(
+        jnp.broadcast_to(jnp.arange(1, scores.shape[-1] + 1), scores.shape),
+        jnp.argsort(order, axis=-1), axis=-1)
+    return ranks
+
+
+def dcg_metric(scores, labels, where=None, top_n=None):
+    """DCG@top_n = sum gain/log2(1+rank); gain = 2^label - 1."""
+    if where is None:
+        where = jnp.ones_like(scores, dtype=bool)
+    ranks = _rank_by_score(scores, where)
+    gains = (jnp.exp2(labels.astype(jnp.float32)) - 1.0) * where
+    discounts = 1.0 / jnp.log2(1.0 + ranks.astype(jnp.float32))
+    if top_n is not None:
+        discounts = jnp.where(ranks <= top_n, discounts, 0.0)
+    per_list = jnp.sum(gains * discounts, axis=-1)
+    return jnp.mean(per_list)
+
+
+def ndcg_metric(scores, labels, where=None, top_n=None):
+    if where is None:
+        where = jnp.ones_like(scores, dtype=bool)
+    ranks = _rank_by_score(scores, where)
+    gains = (jnp.exp2(labels.astype(jnp.float32)) - 1.0) * where
+    discounts = 1.0 / jnp.log2(1.0 + ranks.astype(jnp.float32))
+    if top_n is not None:
+        discounts = jnp.where(ranks <= top_n, discounts, 0.0)
+    dcg = jnp.sum(gains * discounts, axis=-1)
+    ideal_ranks = _rank_by_score(labels.astype(jnp.float32), where)
+    ideal_discounts = 1.0 / jnp.log2(1.0 + ideal_ranks.astype(jnp.float32))
+    if top_n is not None:
+        ideal_discounts = jnp.where(ideal_ranks <= top_n, ideal_discounts, 0.0)
+    idcg = jnp.sum(gains * ideal_discounts, axis=-1)
+    return jnp.mean(jnp.where(idcg > 0, dcg / jnp.maximum(idcg, 1e-12), 0.0))
+
+
+def mrr_metric(scores, labels, where=None, top_n=None):
+    """Mean reciprocal rank of the first relevant (label > 0) item."""
+    if where is None:
+        where = jnp.ones_like(scores, dtype=bool)
+    ranks = _rank_by_score(scores, where)
+    relevant = (labels > 0) & where
+    rr = jnp.where(relevant, 1.0 / ranks.astype(jnp.float32), 0.0)
+    if top_n is not None:
+        rr = jnp.where(ranks <= top_n, rr, 0.0)
+    return jnp.mean(jnp.max(rr, axis=-1))
+
+
+def average_precision_metric(scores, labels, where=None, top_n=None):
+    """AP = mean over relevant items of precision@rank."""
+    if where is None:
+        where = jnp.ones_like(scores, dtype=bool)
+    ranks = _rank_by_score(scores, where)
+    relevant = ((labels > 0) & where).astype(jnp.float32)
+    K = scores.shape[-1]
+    # rel_at_rank[b, r] = is the item ranked (r+1) relevant?
+    order = jnp.argsort(jnp.where(where, -scores, jnp.inf), axis=-1)
+    rel_sorted = jnp.take_along_axis(relevant, order, axis=-1)
+    cum_rel = jnp.cumsum(rel_sorted, axis=-1)
+    prec_at = cum_rel / jnp.arange(1, K + 1, dtype=jnp.float32)
+    contrib = prec_at * rel_sorted
+    if top_n is not None:
+        contrib = jnp.where(jnp.arange(1, K + 1) <= top_n, contrib, 0.0)
+    n_rel = jnp.maximum(jnp.sum(relevant, axis=-1), 1.0)
+    return jnp.mean(jnp.sum(contrib, axis=-1) / n_rel)
+
+
+class RaxMetric:
+    """Adapter matching the paper's Listing 7 RaxMetric(fn, top_n=...)."""
+
+    requires = ("scores", "labels", "where")
+
+    def __init__(self, fn, top_n=None):
+        self.fn = fn
+        self.top_n = top_n
+
+    def init_state(self, positions: int):
+        del positions
+        return {"sum": jnp.zeros((), jnp.float32), "count": jnp.zeros((), jnp.float32)}
+
+    def update(self, state, scores=None, labels=None, where=None, **_):
+        value = self.fn(scores, labels, where=where, top_n=self.top_n)
+        return {"sum": state["sum"] + value, "count": state["count"] + 1.0}
+
+    def compute(self, state):
+        return state["sum"] / jnp.maximum(state["count"], 1.0)
+
+    def compute_per_rank(self, state):
+        return self.compute(state)

@@ -1,0 +1,40 @@
+"""The ten CLAX click models (paper Appendix A) + the mixture meta-model."""
+from repro.core.models.ctr import GlobalCTR, RankCTR, DocumentCTR
+from repro.core.models.pbm import PositionBasedModel
+from repro.core.models.cascade import CascadeModel
+from repro.core.models.ubm import UserBrowsingModel
+from repro.core.models.chain import (
+    DependentClickModel,
+    ClickChainModel,
+    DynamicBayesianNetwork,
+    SimplifiedDBN,
+)
+from repro.core.models.mixture import MixtureModel
+
+MODEL_REGISTRY = {
+    "gctr": GlobalCTR,
+    "rctr": RankCTR,
+    "dctr": DocumentCTR,
+    "pbm": PositionBasedModel,
+    "cm": CascadeModel,
+    "ubm": UserBrowsingModel,
+    "dcm": DependentClickModel,
+    "ccm": ClickChainModel,
+    "dbn": DynamicBayesianNetwork,
+    "sdbn": SimplifiedDBN,
+}
+
+__all__ = [
+    "GlobalCTR",
+    "RankCTR",
+    "DocumentCTR",
+    "PositionBasedModel",
+    "CascadeModel",
+    "UserBrowsingModel",
+    "DependentClickModel",
+    "ClickChainModel",
+    "DynamicBayesianNetwork",
+    "SimplifiedDBN",
+    "MixtureModel",
+    "MODEL_REGISTRY",
+]

@@ -1,0 +1,57 @@
+"""Cascade model (paper A.5): click the first attractive doc, then stop."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.base import clicks_before
+from repro.core.models.ctr import _PartsModel
+from repro.core.parameterization import EmbeddingParameterConfig, build_parameter
+from repro.stable import MIN_LOG_PROB, log1mexp, log_sigmoid
+
+
+class CascadeModel(_PartsModel):
+    def __init__(self, query_doc_pairs: int = None, positions: int = 10,
+                 attraction=None, init_prob: float = 0.5, **_):
+        self.positions = positions
+        logit = math.log(init_prob) - math.log1p(-init_prob)
+        if attraction is None:
+            attraction = EmbeddingParameterConfig(parameters=query_doc_pairs,
+                                                  init_logit=logit)
+        self.parts = {"attraction": build_parameter(attraction)}
+
+    def _log_attr(self, params, batch):
+        return log_sigmoid(self.parts["attraction"](params["attraction"], batch))
+
+    def predict_clicks(self, params, batch):
+        """Eq. 23: log gamma_d + sum_{i<k} log(1 - gamma_{d_i})."""
+        la = self._log_attr(params, batch)
+        log_no_click = log1mexp(la)
+        csum = jnp.cumsum(log_no_click, axis=1)
+        exclusive = jnp.concatenate([jnp.zeros_like(csum[:, :1]), csum[:, :-1]], axis=1)
+        return la + exclusive
+
+    def predict_conditional_clicks(self, params, batch):
+        """Eq. 24: gamma_d until the first click, MIN_LOG_PROB afterwards."""
+        la = self._log_attr(params, batch)
+        any_click_before = clicks_before(batch["clicks"]) > 0
+        return jnp.where(any_click_before, MIN_LOG_PROB, la)
+
+    def predict_relevance(self, params, batch):
+        return self.parts["attraction"](params["attraction"], batch)
+
+    def sample(self, params, batch, rng):
+        la = self._log_attr(params, batch)
+        attracted = (jax.random.uniform(rng, la.shape) < jnp.exp(la)).astype(jnp.float32)
+
+        def step(still_browsing, a_k):
+            click = still_browsing * a_k
+            return still_browsing * (1.0 - a_k), (click, still_browsing)
+
+        _, (clicks, examined) = jax.lax.scan(
+            step, jnp.ones(la.shape[0]), jnp.moveaxis(attracted, 1, 0))
+        clicks = jnp.moveaxis(clicks, 0, 1) * batch["mask"].astype(jnp.float32)
+        examined = jnp.moveaxis(examined, 0, 1)
+        return {"clicks": clicks, "attraction": attracted, "examination": examined}

@@ -1,0 +1,281 @@
+"""Examination-chain models: DCM (A.7), CCM (A.8), DBN (A.9), SDBN.
+
+All share the structure: log P(C_k=1 | .) = log eps_k + log gamma_{d_k} with a
+model-specific log-space recursion for the examination chain eps. The
+recursions run as lax.scan over the position axis; sessions are right-padded
+so padded tail positions never influence real ones.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.models.ctr import _PartsModel
+from repro.core.parameterization import (
+    EmbeddingParameterConfig,
+    PositionParameter,
+    ScalarParameter,
+    ScalarParameterConfig,
+    build_parameter,
+)
+from repro.stable import log1mexp, log_sigmoid, logsumexp
+
+
+def _scan_positions(step, init, *arrays):
+    """Scan ``step`` over axis 1 of the given (B, K) arrays."""
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in arrays)
+    _, ys = jax.lax.scan(step, init, xs)
+    return jnp.moveaxis(ys, 0, 1)
+
+
+def _lse2(a, b):
+    """Elementwise log(exp(a) + exp(b)), stable."""
+    return logsumexp(jnp.stack([a, b], axis=-1), axis=-1)
+
+
+class DependentClickModel(_PartsModel):
+    """DCM: after a click, continue browsing with rank-dependent lambda_k."""
+
+    def __init__(self, query_doc_pairs: int = None, positions: int = 10,
+                 attraction=None, continuation=None, init_prob: float = 0.5, **_):
+        self.positions = positions
+        logit = math.log(init_prob) - math.log1p(-init_prob)
+        if attraction is None:
+            attraction = EmbeddingParameterConfig(parameters=query_doc_pairs,
+                                                  init_logit=logit)
+        if continuation is None:
+            continuation = PositionParameter(positions, init_logit=0.0)
+        self.parts = {
+            "attraction": build_parameter(attraction),
+            "continuation": build_parameter(continuation, positions=positions),
+        }
+
+    def _log_terms(self, params, batch):
+        la = log_sigmoid(self.parts["attraction"](params["attraction"], batch))
+        ll = log_sigmoid(self.parts["continuation"](params["continuation"], batch))
+        return la, ll
+
+    def predict_clicks(self, params, batch):
+        """Eq. 27: eps_{k+1} = eps_k * (gamma*lambda + (1-gamma))."""
+        la, ll = self._log_terms(params, batch)
+
+        def step(log_eps, xs):
+            la_k, ll_k = xs
+            log_p = log_eps + la_k
+            log_eps_next = log_eps + _lse2(la_k + ll_k, log1mexp(la_k))
+            return log_eps_next, log_p
+
+        return _scan_positions(step, jnp.zeros(la.shape[0]), la, ll)
+
+    def predict_conditional_clicks(self, params, batch):
+        """Eq. 28: click -> eps = lambda_k; skip -> Bayes posterior."""
+        la, ll = self._log_terms(params, batch)
+        clicks = batch["clicks"].astype(jnp.float32)
+
+        def step(log_eps, xs):
+            la_k, ll_k, c_k = xs
+            log_p = log_eps + la_k
+            click_branch = ll_k
+            skip_branch = log1mexp(la_k) + log_eps - log1mexp(la_k + log_eps)
+            log_eps_next = jnp.where(c_k > 0, click_branch, skip_branch)
+            return log_eps_next, log_p
+
+        return _scan_positions(step, jnp.zeros(la.shape[0]), la, ll, clicks)
+
+    def predict_relevance(self, params, batch):
+        return self.parts["attraction"](params["attraction"], batch)
+
+    def sample(self, params, batch, rng):
+        la, ll = self._log_terms(params, batch)
+        k1, k2 = jax.random.split(rng)
+        attracted = (jax.random.uniform(k1, la.shape) < jnp.exp(la)).astype(jnp.float32)
+        cont_u = jax.random.uniform(k2, la.shape)
+
+        def step(examining, xs):
+            a_k, lam_logp, u = xs
+            click = examining * a_k
+            keep = jnp.where(click > 0, (u < jnp.exp(lam_logp)).astype(jnp.float32), 1.0)
+            return examining * keep, (click, examining)
+
+        xs = tuple(jnp.moveaxis(a, 1, 0) for a in (attracted, ll, cont_u))
+        _, (clicks, examined) = jax.lax.scan(step, jnp.ones(la.shape[0]), xs)
+        clicks = jnp.moveaxis(clicks, 0, 1) * batch["mask"].astype(jnp.float32)
+        return {"clicks": clicks, "attraction": attracted,
+                "examination": jnp.moveaxis(examined, 0, 1)}
+
+
+class ClickChainModel(_PartsModel):
+    """CCM: three continuation scenarios tau_1/2/3 (Eq. 29-30)."""
+
+    def __init__(self, query_doc_pairs: int = None, positions: int = 10,
+                 attraction=None, init_prob: float = 0.5,
+                 tau_init=(0.7, 0.4, 0.2), **_):
+        self.positions = positions
+        logit = math.log(init_prob) - math.log1p(-init_prob)
+        if attraction is None:
+            attraction = EmbeddingParameterConfig(parameters=query_doc_pairs,
+                                                  init_logit=logit)
+        self.parts = {
+            "attraction": build_parameter(attraction),
+            "tau_1": ScalarParameter(ScalarParameterConfig(init_prob=tau_init[0])),
+            "tau_2": ScalarParameter(ScalarParameterConfig(init_prob=tau_init[1])),
+            "tau_3": ScalarParameter(ScalarParameterConfig(init_prob=tau_init[2])),
+        }
+
+    def _log_terms(self, params, batch):
+        la = log_sigmoid(self.parts["attraction"](params["attraction"], batch))
+        lts = tuple(log_sigmoid(self.parts[f"tau_{i}"](params[f"tau_{i}"], batch))
+                    for i in (1, 2, 3))
+        return la, lts
+
+    def predict_clicks(self, params, batch):
+        la, (lt1, lt2, lt3) = self._log_terms(params, batch)
+
+        def step(log_eps, xs):
+            la_k, lt1_k, lt2_k, lt3_k = xs
+            log_p = log_eps + la_k
+            # gamma*((1-gamma)tau2 + gamma*tau3) + (1-gamma)*tau1
+            inner = _lse2(log1mexp(la_k) + lt2_k, la_k + lt3_k)
+            log_eps_next = log_eps + _lse2(la_k + inner, log1mexp(la_k) + lt1_k)
+            return log_eps_next, log_p
+
+        return _scan_positions(step, jnp.zeros(la.shape[0]), la, lt1, lt2, lt3)
+
+    def predict_conditional_clicks(self, params, batch):
+        la, (lt1, lt2, lt3) = self._log_terms(params, batch)
+        clicks = batch["clicks"].astype(jnp.float32)
+
+        def step(log_eps, xs):
+            la_k, lt1_k, lt2_k, lt3_k, c_k = xs
+            log_p = log_eps + la_k
+            click_branch = _lse2(la_k + lt3_k, log1mexp(la_k) + lt2_k)
+            skip_branch = (log1mexp(la_k) + log_eps + lt1_k
+                           - log1mexp(la_k + log_eps))
+            log_eps_next = jnp.where(c_k > 0, click_branch, skip_branch)
+            return log_eps_next, log_p
+
+        return _scan_positions(step, jnp.zeros(la.shape[0]), la, lt1, lt2, lt3, clicks)
+
+    def predict_relevance(self, params, batch):
+        return self.parts["attraction"](params["attraction"], batch)
+
+    def sample(self, params, batch, rng):
+        la, (lt1, lt2, lt3) = self._log_terms(params, batch)
+        k1, k2, k3 = jax.random.split(rng, 3)
+        attracted = (jax.random.uniform(k1, la.shape) < jnp.exp(la)).astype(jnp.float32)
+        satisfied = (jax.random.uniform(k2, la.shape) < jnp.exp(la)).astype(jnp.float32)
+        cont_u = jax.random.uniform(k3, la.shape)
+
+        def step(examining, xs):
+            a_k, s_k, lt1_k, lt2_k, lt3_k, u = xs
+            click = examining * a_k
+            log_cont = jnp.where(click > 0,
+                                 jnp.where(s_k > 0, lt3_k, lt2_k),
+                                 lt1_k)
+            keep = (u < jnp.exp(log_cont)).astype(jnp.float32)
+            return examining * keep, (click, examining)
+
+        xs = tuple(jnp.moveaxis(a, 1, 0)
+                   for a in (attracted, satisfied, lt1, lt2, lt3, cont_u))
+        _, (clicks, examined) = jax.lax.scan(step, jnp.ones(la.shape[0]), xs)
+        clicks = jnp.moveaxis(clicks, 0, 1) * batch["mask"].astype(jnp.float32)
+        return {"clicks": clicks, "attraction": attracted, "satisfaction": satisfied,
+                "examination": jnp.moveaxis(examined, 0, 1)}
+
+
+class DynamicBayesianNetwork(_PartsModel):
+    """DBN (Eq. 31-32): separate attraction and satisfaction, global lambda."""
+
+    fixed_continuation = False  # SDBN overrides
+
+    def __init__(self, query_doc_pairs: int = None, positions: int = 10,
+                 attraction=None, satisfaction=None, init_prob: float = 0.5,
+                 lambda_init: float = 0.9, **_):
+        self.positions = positions
+        logit = math.log(init_prob) - math.log1p(-init_prob)
+        if attraction is None:
+            attraction = EmbeddingParameterConfig(parameters=query_doc_pairs,
+                                                  init_logit=logit)
+        if satisfaction is None:
+            satisfaction = EmbeddingParameterConfig(parameters=query_doc_pairs,
+                                                    init_logit=logit)
+        self.parts = {
+            "attraction": build_parameter(attraction),
+            "satisfaction": build_parameter(satisfaction),
+        }
+        if not self.fixed_continuation:
+            self.parts["continuation"] = ScalarParameter(
+                ScalarParameterConfig(init_prob=lambda_init))
+
+    def _log_terms(self, params, batch):
+        la = log_sigmoid(self.parts["attraction"](params["attraction"], batch))
+        ls = log_sigmoid(self.parts["satisfaction"](params["satisfaction"], batch))
+        if self.fixed_continuation:
+            lc = jnp.zeros_like(la)  # log(1)
+        else:
+            lc = log_sigmoid(self.parts["continuation"](params["continuation"], batch))
+        return la, ls, lc
+
+    def predict_clicks(self, params, batch):
+        """Eq. 31: eps_{k+1} = eps_k * lambda * (1 - gamma*sigma)."""
+        la, ls, lc = self._log_terms(params, batch)
+
+        def step(log_eps, xs):
+            la_k, ls_k, lc_k = xs
+            log_p = log_eps + la_k
+            log_eps_next = log_eps + lc_k + log1mexp(la_k + ls_k)
+            return log_eps_next, log_p
+
+        return _scan_positions(step, jnp.zeros(la.shape[0]), la, ls, lc)
+
+    def predict_conditional_clicks(self, params, batch):
+        """Eq. 32."""
+        la, ls, lc = self._log_terms(params, batch)
+        clicks = batch["clicks"].astype(jnp.float32)
+
+        def step(log_eps, xs):
+            la_k, ls_k, lc_k, c_k = xs
+            log_p = log_eps + la_k
+            click_branch = log1mexp(ls_k)
+            skip_branch = (log1mexp(la_k) + log_eps - log1mexp(la_k + log_eps))
+            log_eps_next = lc_k + jnp.where(c_k > 0, click_branch, skip_branch)
+            return log_eps_next, log_p
+
+        return _scan_positions(step, jnp.zeros(la.shape[0]), la, ls, lc, clicks)
+
+    def predict_relevance(self, params, batch):
+        """DBN ranks by attractiveness * satisfaction (paper §4.1)."""
+        la = log_sigmoid(self.parts["attraction"](params["attraction"], batch))
+        ls = log_sigmoid(self.parts["satisfaction"](params["satisfaction"], batch))
+        return la + ls
+
+    def sample(self, params, batch, rng):
+        la, ls, lc = self._log_terms(params, batch)
+        k1, k2, k3 = jax.random.split(rng, 3)
+        attracted = (jax.random.uniform(k1, la.shape) < jnp.exp(la)).astype(jnp.float32)
+        satisfied_draw = (jax.random.uniform(k2, ls.shape) < jnp.exp(ls)).astype(jnp.float32)
+        cont_u = jax.random.uniform(k3, la.shape)
+
+        def step(examining, xs):
+            a_k, s_k, lc_k, u = xs
+            click = examining * a_k
+            satisfied = click * s_k
+            cont = (u < jnp.exp(lc_k)).astype(jnp.float32)
+            return examining * (1.0 - satisfied) * cont, (click, examining, satisfied)
+
+        xs = tuple(jnp.moveaxis(a, 1, 0)
+                   for a in (attracted, satisfied_draw, lc, cont_u))
+        _, (clicks, examined, satisfied) = jax.lax.scan(
+            step, jnp.ones(la.shape[0]), xs)
+        clicks = jnp.moveaxis(clicks, 0, 1) * batch["mask"].astype(jnp.float32)
+        return {"clicks": clicks, "attraction": attracted,
+                "satisfaction": jnp.moveaxis(satisfied, 0, 1),
+                "examination": jnp.moveaxis(examined, 0, 1)}
+
+
+class SimplifiedDBN(DynamicBayesianNetwork):
+    """SDBN: DBN with lambda fixed at 1 (always continue unless satisfied)."""
+
+    fixed_continuation = True

@@ -1,0 +1,93 @@
+"""CTR baselines: GCTR (A.1), RCTR (A.2), DCTR (A.3)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.base import ClickModel
+from repro.core.parameterization import (
+    EmbeddingParameterConfig,
+    PositionParameter,
+    ScalarParameter,
+    ScalarParameterConfig,
+    build_parameter,
+)
+from repro.nn.module import split_rngs
+from repro.stable import log_sigmoid
+
+
+class _PartsModel(ClickModel):
+    """Shared plumbing: init/apply over the ``parts`` slot dict."""
+
+    def init(self, rng):
+        keys = split_rngs(rng, len(self.parts))
+        return {name: mod.init(k) for (name, mod), k in zip(self.parts.items(), keys)}
+
+
+class GlobalCTR(_PartsModel):
+    """log P(C=1|d,k) = log rho (paper Eq. 19)."""
+
+    def __init__(self, positions: int = 10, init_prob: float = 0.5, **_):
+        self.positions = positions
+        self.parts = {"rho": ScalarParameter(ScalarParameterConfig(init_prob=init_prob))}
+
+    def predict_clicks(self, params, batch):
+        return log_sigmoid(self.parts["rho"](params["rho"], batch))
+
+    def predict_relevance(self, params, batch):
+        return self.predict_clicks(params, batch)
+
+    def sample(self, params, batch, rng):
+        log_p = self.predict_clicks(params, batch)
+        clicks = (jax.random.uniform(rng, log_p.shape) < jnp.exp(log_p)).astype(jnp.float32)
+        clicks = clicks * batch["mask"].astype(jnp.float32)
+        return {"clicks": clicks}
+
+
+class RankCTR(_PartsModel):
+    """log P(C=1|d,k) = log theta_k (paper Eq. 20)."""
+
+    def __init__(self, positions: int = 10, init_prob: float = 0.5, **_):
+        import math
+
+        self.positions = positions
+        logit = math.log(init_prob) - math.log1p(-init_prob)
+        self.parts = {"theta": PositionParameter(positions, init_logit=logit)}
+
+    def predict_clicks(self, params, batch):
+        return log_sigmoid(self.parts["theta"](params["theta"], batch))
+
+    def predict_relevance(self, params, batch):
+        # rank-only model: no document signal; all docs tie.
+        return jnp.zeros_like(batch["positions"], dtype=jnp.float32)
+
+    def sample(self, params, batch, rng):
+        log_p = self.predict_clicks(params, batch)
+        clicks = (jax.random.uniform(rng, log_p.shape) < jnp.exp(log_p)).astype(jnp.float32)
+        return {"clicks": clicks * batch["mask"].astype(jnp.float32)}
+
+
+class DocumentCTR(_PartsModel):
+    """log P(C=1|d,k) = log gamma_d (paper Eq. 21)."""
+
+    def __init__(self, query_doc_pairs: int = None, positions: int = 10,
+                 attraction=None, init_prob: float = 0.5, **_):
+        import math
+
+        self.positions = positions
+        logit = math.log(init_prob) - math.log1p(-init_prob)
+        if attraction is None:
+            attraction = EmbeddingParameterConfig(parameters=query_doc_pairs,
+                                                  init_logit=logit)
+        self.parts = {"attraction": build_parameter(attraction)}
+
+    def predict_clicks(self, params, batch):
+        return log_sigmoid(self.parts["attraction"](params["attraction"], batch))
+
+    def predict_relevance(self, params, batch):
+        return self.parts["attraction"](params["attraction"], batch)
+
+    def sample(self, params, batch, rng):
+        log_p = self.predict_clicks(params, batch)
+        clicks = (jax.random.uniform(rng, log_p.shape) < jnp.exp(log_p)).astype(jnp.float32)
+        return {"clicks": clicks * batch["mask"].astype(jnp.float32)}

@@ -1,0 +1,126 @@
+"""Mixture meta-model (paper §4.3, Eq. 12).
+
+Learns a prior P(m) over M click models; the session loss is the temperature-
+scaled log-sum-exp of per-model session log-losses. Parameter *sharing*
+between member models (paper Listing 5) works by identity: if two models hold
+the same parameter-module object, its parameters are stored once in a
+canonical ``store`` and referenced by both — gradient contributions from every
+use accumulate on the single copy automatically under autodiff.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.base import ClickModel
+from repro.nn.module import split_rngs
+from repro.stable import log_bce, logsumexp
+
+
+class MixtureModel(ClickModel):
+    def __init__(self, models: Sequence[ClickModel], temperature: float = 1.0):
+        self.models = list(models)
+        self.temperature = temperature
+        self.positions = max(m.positions for m in self.models)
+        # Deduplicate parameter modules by object identity.
+        self.store_keys: List[dict] = []  # per model: slot -> store key
+        self.store_modules = {}  # store key -> module
+        seen = {}
+        for i, model in enumerate(self.models):
+            slot_map = {}
+            for slot, module in model.parts.items():
+                key = seen.get(id(module))
+                if key is None:
+                    key = f"m{i}_{slot}"
+                    seen[id(module)] = key
+                    self.store_modules[key] = module
+                slot_map[slot] = key
+            self.store_keys.append(slot_map)
+
+    def init(self, rng):
+        keys = split_rngs(rng, len(self.store_modules) + 1)
+        store = {k: mod.init(kk)
+                 for (k, mod), kk in zip(self.store_modules.items(), keys[:-1])}
+        return {
+            "prior_logits": jnp.zeros((len(self.models),), jnp.float32),
+            "store": store,
+        }
+
+    def _model_params(self, params, i):
+        return {slot: params["store"][key] for slot, key in self.store_keys[i].items()}
+
+    def _log_prior(self, params):
+        return jax.nn.log_softmax(params["prior_logits"])
+
+    # -- losses ------------------------------------------------------------------
+    def session_losses(self, params, batch):
+        """Per-model per-session NLL: (M, B)."""
+        mask = batch["mask"].astype(jnp.float32)
+        losses = []
+        for i, model in enumerate(self.models):
+            lp = model.predict_conditional_clicks(self._model_params(params, i), batch)
+            nll = log_bce(lp, batch["clicks"]) * mask
+            losses.append(jnp.sum(nll, axis=1))
+        return jnp.stack(losses, axis=0)
+
+    def compute_loss(self, params, batch):
+        """Eq. 12, normalized per item so scale matches member models."""
+        log_prior = self._log_prior(params)  # (M,)
+        nll = self.session_losses(params, batch)  # (M, B)
+        mix = -logsumexp(log_prior[:, None] - nll / self.temperature, axis=0)
+        n_items = jnp.maximum(jnp.sum(batch["mask"]), 1.0)
+        return jnp.sum(mix) / n_items
+
+    # -- predictions ---------------------------------------------------------------
+    def predict_clicks(self, params, batch):
+        """Prior-weighted mixture: log sum_m P(m) P_m(C=1|d,k)."""
+        log_prior = self._log_prior(params)
+        preds = jnp.stack([
+            m.predict_clicks(self._model_params(params, i), batch)
+            for i, m in enumerate(self.models)
+        ], axis=0)  # (M, B, K)
+        return logsumexp(log_prior[:, None, None] + preds, axis=0)
+
+    def predict_conditional_clicks(self, params, batch):
+        """Posterior-weighted: weights from each model's prefix likelihood.
+
+        w_m(k) ∝ P(m) * P_m(c_<k); strictly causal (uses clicks before k only).
+        """
+        log_prior = self._log_prior(params)
+        mask = batch["mask"].astype(jnp.float32)
+        cond, prefix = [], []
+        for i, m in enumerate(self.models):
+            lp = m.predict_conditional_clicks(self._model_params(params, i), batch)
+            cond.append(lp)
+            ll = -log_bce(lp, batch["clicks"]) * mask  # (B, K) per-item log-lik
+            csum = jnp.cumsum(ll, axis=1)
+            prefix.append(jnp.concatenate(
+                [jnp.zeros_like(csum[:, :1]), csum[:, :-1]], axis=1))
+        cond = jnp.stack(cond, axis=0)  # (M, B, K)
+        prefix = jnp.stack(prefix, axis=0)  # (M, B, K)
+        log_w = log_prior[:, None, None] + prefix / self.temperature
+        log_w = log_w - logsumexp(log_w, axis=0, keepdims=True)
+        return logsumexp(log_w + cond, axis=0)
+
+    def predict_relevance(self, params, batch):
+        log_prior = self._log_prior(params)
+        scores = jnp.stack([
+            m.predict_relevance(self._model_params(params, i), batch)
+            for i, m in enumerate(self.models)
+        ], axis=0)
+        return jnp.sum(jnp.exp(log_prior)[:, None, None] * scores, axis=0)
+
+    def sample(self, params, batch, rng):
+        k_pick, k_sample = jax.random.split(rng)
+        log_prior = self._log_prior(params)
+        b = batch["positions"].shape[0]
+        choice = jax.random.categorical(k_pick, log_prior, shape=(b,))
+        samples = [m.sample(self._model_params(params, i), batch,
+                            jax.random.fold_in(k_sample, i))["clicks"]
+                   for i, m in enumerate(self.models)]
+        stacked = jnp.stack(samples, axis=0)  # (M, B, K)
+        clicks = jnp.take_along_axis(
+            stacked, choice[None, :, None].astype(jnp.int32), axis=0)[0]
+        return {"clicks": clicks, "model_choice": choice}

@@ -1,0 +1,57 @@
+"""Position-based model (paper §3, Eq. 22): P(C) = theta_k * gamma_d."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.models.ctr import _PartsModel
+from repro.core.parameterization import (
+    EmbeddingParameterConfig,
+    PositionParameter,
+    build_parameter,
+)
+from repro.stable import log_sigmoid
+
+
+class PositionBasedModel(_PartsModel):
+    """PBM: two-tower in its neural form (paper Listing 4).
+
+    attraction / examination accept any parameterization config or module;
+    defaults are the classic embedding-table + rank-table CLAX setup.
+    """
+
+    def __init__(self, query_doc_pairs: int = None, positions: int = 10,
+                 attraction=None, examination=None, init_prob: float = 0.5, **_):
+        self.positions = positions
+        logit = math.log(init_prob) - math.log1p(-init_prob)
+        if attraction is None:
+            attraction = EmbeddingParameterConfig(parameters=query_doc_pairs,
+                                                  init_logit=logit)
+        if examination is None:
+            examination = PositionParameter(positions, init_logit=2.0)
+        self.parts = {
+            "attraction": build_parameter(attraction),
+            "examination": build_parameter(examination, positions=positions),
+        }
+
+    def _log_probs(self, params, batch):
+        la = log_sigmoid(self.parts["attraction"](params["attraction"], batch))
+        le = log_sigmoid(self.parts["examination"](params["examination"], batch))
+        return la, le
+
+    def predict_clicks(self, params, batch):
+        la, le = self._log_probs(params, batch)
+        return la + le
+
+    def predict_relevance(self, params, batch):
+        return self.parts["attraction"](params["attraction"], batch)
+
+    def sample(self, params, batch, rng):
+        la, le = self._log_probs(params, batch)
+        ka, ke = jax.random.split(rng)
+        attracted = (jax.random.uniform(ka, la.shape) < jnp.exp(la)).astype(jnp.float32)
+        examined = (jax.random.uniform(ke, le.shape) < jnp.exp(le)).astype(jnp.float32)
+        clicks = attracted * examined * batch["mask"].astype(jnp.float32)
+        return {"clicks": clicks, "attraction": attracted, "examination": examined}

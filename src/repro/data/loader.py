@@ -1,0 +1,101 @@
+"""Deterministic, checkpointable, shard-aware batch loader.
+
+Designed for the fault-tolerance story: loader state (epoch, step, shuffle
+seed) is a tiny pytree saved with every checkpoint, so a preempted run resumes
+mid-epoch bit-exactly. For multi-host setups, ``host_id``/``host_count`` carve
+disjoint session shards per host (each host loads only its slice, the standard
+data-parallel input pipeline at pod scale).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional, Tuple
+
+import numpy as np
+
+MODEL_KEYS = ("positions", "query_doc_ids", "clicks", "mask",
+              "query_doc_features", "bias_features")
+
+
+def split_sessions(data: Dict[str, np.ndarray], fractions=(0.8, 0.1, 0.1),
+                   seed: int = 0):
+    """Shuffle-split a session dict into train/val/test dicts."""
+    n = data["positions"].shape[0]
+    order = np.random.default_rng(seed).permutation(n)
+    out = []
+    start = 0
+    for frac in fractions:
+        size = int(round(n * frac))
+        idx = order[start:start + size]
+        out.append({k: v[idx] for k, v in data.items()})
+        start += size
+    return tuple(out)
+
+
+@dataclasses.dataclass
+class LoaderState:
+    epoch: int = 0
+    step: int = 0  # batch index within the epoch
+
+    def to_dict(self):
+        return {"epoch": self.epoch, "step": self.step}
+
+    @classmethod
+    def from_dict(cls, d):
+        return cls(epoch=int(d["epoch"]), step=int(d["step"]))
+
+
+class ClickLogLoader:
+    def __init__(self, data: Dict[str, np.ndarray], batch_size: int,
+                 shuffle: bool = True, seed: int = 0, drop_last: bool = True,
+                 host_id: int = 0, host_count: int = 1,
+                 include_keys: Optional[Tuple[str, ...]] = None):
+        keys = include_keys or tuple(k for k in data if k in MODEL_KEYS)
+        self.data = {k: data[k] for k in keys}
+        n = next(iter(self.data.values())).shape[0]
+        # host shard: contiguous slice per host
+        per_host = n // host_count
+        lo, hi = host_id * per_host, (host_id + 1) * per_host
+        self.data = {k: v[lo:hi] for k, v in self.data.items()}
+        self.n = per_host
+        self.batch_size = batch_size
+        self.shuffle = shuffle
+        self.seed = seed
+        self.drop_last = drop_last
+        self.state = LoaderState()
+
+    @property
+    def batches_per_epoch(self) -> int:
+        if self.drop_last:
+            return self.n // self.batch_size
+        return -(-self.n // self.batch_size)
+
+    def _epoch_order(self, epoch: int) -> np.ndarray:
+        if not self.shuffle:
+            return np.arange(self.n)
+        return np.random.default_rng((self.seed, epoch)).permutation(self.n)
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        """Resumes from self.state; advances it as batches are consumed."""
+        while True:
+            order = self._epoch_order(self.state.epoch)
+            nb = self.batches_per_epoch
+            while self.state.step < nb:
+                i = self.state.step
+                idx = order[i * self.batch_size:(i + 1) * self.batch_size]
+                self.state.step += 1
+                yield {k: v[idx] for k, v in self.data.items()}
+            self.state = LoaderState(epoch=self.state.epoch + 1, step=0)
+            return  # one epoch per __iter__ call
+
+    def epochs(self, n_epochs: int):
+        start = self.state.epoch
+        while self.state.epoch < start + n_epochs:
+            yield from iter(self)
+
+    # -- checkpointing -----------------------------------------------------------
+    def state_dict(self):
+        return self.state.to_dict()
+
+    def load_state_dict(self, d):
+        self.state = LoaderState.from_dict(d)

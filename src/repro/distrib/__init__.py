@@ -1,0 +1,32 @@
+"""Distribution layer: sharding rules, shard_map collectives, compression."""
+from repro.distrib.shardings import (
+    batch_spec,
+    table_spec,
+    replicated_spec,
+    make_shardings,
+    DATA_AXES,
+    MODEL_AXIS,
+)
+from repro.distrib.compression import (
+    quantize_int8,
+    dequantize_int8,
+    CompressedAllReduce,
+)
+from repro.distrib.collectives import (
+    sharded_embedding_lookup,
+    masked_psum_lookup,
+)
+
+__all__ = [
+    "batch_spec",
+    "table_spec",
+    "replicated_spec",
+    "make_shardings",
+    "DATA_AXES",
+    "MODEL_AXIS",
+    "quantize_int8",
+    "dequantize_int8",
+    "CompressedAllReduce",
+    "sharded_embedding_lookup",
+    "masked_psum_lookup",
+]

@@ -1,0 +1,59 @@
+"""Mesh-axis conventions and sharding-rule helpers.
+
+Axis convention (see DESIGN.md §5):
+  * ``pod``   — outer data-parallel axis crossing the inter-pod DCI links.
+  * ``data``  — in-pod data parallelism.
+  * ``model`` — tensor/expert/embedding-table parallelism over ICI.
+
+Batch dims shard over (pod, data); tables/weights shard over model.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+MODEL_AXIS = "model"
+
+
+def DATA_AXES(mesh) -> tuple:
+    """Data-parallel axes present in this mesh ('pod' included if multi-pod)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def batch_spec(mesh, extra_dims: int = 1) -> P:
+    """Leading dim over all data axes; remaining dims replicated."""
+    return P(DATA_AXES(mesh), *([None] * extra_dims))
+
+
+def table_spec(mesh, extra_dims: int = 1) -> P:
+    """Row-sharded embedding table / stacked weight over the model axis."""
+    return P(MODEL_AXIS, *([None] * extra_dims))
+
+
+def replicated_spec() -> P:
+    return P()
+
+
+def make_shardings(mesh, tree: Any, rule: Callable[[tuple, Any], P]):
+    """Build a NamedSharding pytree from a (path, leaf) -> PartitionSpec rule."""
+    def to_sharding(path, leaf):
+        spec = rule(path, leaf)
+        return NamedSharding(mesh, spec if spec is not None else P())
+
+    return jax.tree_util.tree_map_with_path(to_sharding, tree)
+
+
+def clax_param_rule(mesh, min_rows_to_shard: int = 1 << 16):
+    """Sharding rule for CLAX/recsys params: big tables row-sharded over
+    'model', everything else replicated (dense towers are tiny)."""
+    model_size = mesh.shape[MODEL_AXIS]
+
+    def rule(path, leaf):
+        if leaf.ndim >= 1 and leaf.shape[0] >= min_rows_to_shard \
+                and leaf.shape[0] % model_size == 0:
+            return P(MODEL_AXIS, *([None] * (leaf.ndim - 1)))
+        return P()
+
+    return rule

@@ -1,0 +1,114 @@
+"""Public jit'd kernel API with implementation dispatch.
+
+``impl``: "pallas" (compiled TPU path; interpret-mode on CPU), "ref" (pure
+jnp oracle). Default is backend-aware: the ref path on CPU (interpret mode is
+a correctness tool, not a fast path) and the Pallas kernel on TPU.
+
+embedding_bag carries a custom VJP so the fused kernel is trainable: the
+backward scatter (d_table) is a segment-sum over SMEM-resident ids — the same
+memory pattern as the forward gather, no (B*L, D) intermediate.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.dcn_cross import dcn_cross_pallas
+from repro.kernels.embedding_bag import embedding_bag_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.fm_interaction import fm_interaction_pallas
+
+
+def _default_impl() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# embedding_bag with custom VJP
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _embedding_bag(table, ids, weights, impl):
+    if impl == "pallas":
+        return embedding_bag_pallas(table, ids, weights, interpret=_interpret())
+    return _ref.embedding_bag_ref(table, ids, weights)
+
+
+def _bag_fwd(table, ids, weights, impl):
+    return _embedding_bag(table, ids, weights, impl), (table, ids, weights)
+
+
+def _bag_bwd(impl, res, g):
+    table, ids, weights = res
+    B, L = ids.shape
+    N, D = table.shape
+    g = g.astype(jnp.float32)  # (B, D)
+    w = jnp.where(ids >= 0, weights, 0.0).astype(jnp.float32)
+    safe = jnp.maximum(ids, 0).reshape(-1)
+    # d_table[r] = sum_{(b,l): ids=r} w[b,l] * g[b]
+    contrib = (w[..., None] * g[:, None, :]).reshape(B * L, D)
+    d_table = jax.ops.segment_sum(contrib, safe, num_segments=N)
+    d_table = d_table.astype(table.dtype)
+    # d_w[b,l] = <table[ids[b,l]], g[b]>
+    rows = jnp.take(table, safe.reshape(B, L), axis=0).astype(jnp.float32)
+    d_w = jnp.einsum("bld,bd->bl", rows, g)
+    d_w = jnp.where(ids >= 0, d_w, 0.0).astype(weights.dtype)
+    return d_table, None, d_w
+
+
+_embedding_bag.defvjp(_bag_fwd, _bag_bwd)
+
+
+def embedding_bag(table: jax.Array, ids: jax.Array,
+                  weights: Optional[jax.Array] = None, combiner: str = "sum",
+                  impl: Optional[str] = None) -> jax.Array:
+    """out[b] = reduce_l table[ids[b, l]]; ids < 0 = padding.
+
+    combiner: "sum" | "mean" (mean over non-padding entries).
+    """
+    impl = impl or _default_impl()
+    if weights is None:
+        weights = jnp.ones(ids.shape, jnp.float32)
+    if combiner == "mean":
+        count = jnp.sum((ids >= 0).astype(jnp.float32), axis=1, keepdims=True)
+        weights = weights / jnp.maximum(count, 1.0)
+    elif combiner != "sum":
+        raise ValueError(f"unknown combiner {combiner!r}")
+    return _embedding_bag(table, ids, weights, impl)
+
+
+# ---------------------------------------------------------------------------
+# fm_interaction / dcn_cross / flash_attention
+# ---------------------------------------------------------------------------
+
+def fm_interaction(v: jax.Array, impl: Optional[str] = None) -> jax.Array:
+    impl = impl or _default_impl()
+    if impl == "pallas":
+        return fm_interaction_pallas(v, interpret=_interpret())
+    return _ref.fm_interaction_ref(v)
+
+
+def dcn_cross(x0: jax.Array, x: jax.Array, w: jax.Array, b: jax.Array,
+              impl: Optional[str] = None) -> jax.Array:
+    impl = impl or _default_impl()
+    if impl == "pallas":
+        return dcn_cross_pallas(x0, x, w, b, interpret=_interpret())
+    return _ref.dcn_cross_ref(x0, x, w, b)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = False, scale: Optional[float] = None,
+                    impl: Optional[str] = None, **block_kwargs) -> jax.Array:
+    impl = impl or _default_impl()
+    if impl == "pallas":
+        return flash_attention_pallas(q, k, v, causal=causal, scale=scale,
+                                      interpret=_interpret(), **block_kwargs)
+    return _ref.flash_attention_ref(q, k, v, causal=causal, scale=scale)

@@ -1,0 +1,81 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each function is the mathematical definition, written with plain jnp ops and
+no performance tricks. Kernels must match these within tolerance across the
+shape/dtype sweeps in tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(table: jax.Array, ids: jax.Array, weights: jax.Array
+                      ) -> jax.Array:
+    """Weighted bag reduction: out[b] = sum_l weights[b,l] * table[ids[b,l]].
+
+    ids: (B, L) int32, entries < 0 are padding (weight must be 0 there too,
+    but we also mask defensively). table: (N, D). weights: (B, L).
+    Returns (B, D) float32.
+    """
+    safe = jnp.maximum(ids, 0)
+    gathered = jnp.take(table, safe, axis=0)  # (B, L, D)
+    w = jnp.where(ids >= 0, weights, 0.0).astype(jnp.float32)
+    return jnp.einsum("bld,bl->bd", gathered.astype(jnp.float32), w)
+
+
+def fm_interaction_ref(v: jax.Array) -> jax.Array:
+    """Factorization-machine 2nd-order term [Rendle 2010]:
+
+    out[b] = 0.5 * sum_d [ (sum_f v[b,f,d])^2 - sum_f v[b,f,d]^2 ].
+    v: (B, F, D). Returns (B,) float32.
+    """
+    vf = v.astype(jnp.float32)
+    sum_sq = jnp.square(jnp.sum(vf, axis=1))          # (B, D)
+    sq_sum = jnp.sum(jnp.square(vf), axis=1)           # (B, D)
+    return 0.5 * jnp.sum(sum_sq - sq_sum, axis=-1)
+
+
+def dcn_cross_ref(x0: jax.Array, x: jax.Array, w: jax.Array, b: jax.Array
+                  ) -> jax.Array:
+    """DCN-V2 cross layer [Wang 2021]: y = x0 * (x @ W + b) + x.
+
+    x0, x: (B, D); w: (D, D); b: (D,). Returns (B, D) float32.
+    """
+    xf = x.astype(jnp.float32)
+    return x0.astype(jnp.float32) * (xf @ w.astype(jnp.float32)
+                                     + b.astype(jnp.float32)) + xf
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = False, scale: float | None = None
+                        ) -> jax.Array:
+    """Softmax attention with GQA head groups.
+
+    q: (B, Hq, Sq, Dh); k, v: (B, Hkv, Skv, Dh) with Hq % Hkv == 0.
+    Returns (B, Hq, Sq, Dh) in q.dtype.
+    """
+    B, Hq, Sq, Dh = q.shape
+    Hkv = k.shape[1]
+    group = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / (Dh ** 0.5)
+    kq = jnp.repeat(k, group, axis=1)
+    vq = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        kq.astype(jnp.float32)) * scale
+    if causal:
+        Skv = k.shape[2]
+        mask = jnp.tril(jnp.ones((Sq, Skv), bool), k=Skv - Sq)
+        logits = jnp.where(mask, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vq.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def segment_mean_ref(values: jax.Array, segment_ids: jax.Array,
+                     num_segments: int) -> jax.Array:
+    """Mean-aggregation by segment (the GraphSAGE aggregator oracle)."""
+    sums = jax.ops.segment_sum(values, segment_ids, num_segments=num_segments)
+    counts = jax.ops.segment_sum(jnp.ones_like(segment_ids, dtype=values.dtype),
+                                 segment_ids, num_segments=num_segments)
+    return sums / jnp.maximum(counts[..., None], 1.0)

@@ -1,0 +1,244 @@
+"""While-aware static cost model over post-optimization HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts each while-loop body ONCE, so any
+scan-over-layers / microbatch-accumulation program is undercounted by the
+trip count (>100x for a 126-layer scan). The CPU backend records
+``"known_trip_count":{"n":...}`` in each while's backend_config, so we walk
+the computation graph and multiply.
+
+Counted per device (shapes in post-SPMD HLO are per-device):
+  * flops            — 2 * result_elems * contracted_size for every dot
+                       (MXU work; elementwise VPU flops are ignored — never
+                       the binding term for these models),
+  * bytes            — operands + results of every materialized top-level op
+                       (fusion boundaries = buffer reads/writes; bitcast/
+                       tuple/parameter/gte are free),
+  * collective wire  — ring-model bytes per collective op
+                       (all-gather (S-1)/S*out, all-reduce 2(S-1)/S*out,
+                       reduce-scatter (S-1)*out, all-to-all (S-1)/S*out,
+                       collective-permute out),
+all scaled by the product of enclosing while trip counts.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\(")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_GROUPS_RE = re.compile(r"replica_groups=(?:\{\{([^}]*)\}|\[(\d+),(\d+)\]<=)")
+_ARG_RE = re.compile(r"%([\w.\-]+)")
+_PARAM_RE = re.compile(r"%?([\w.\-]+):\s*((?:\([^)]*\)|[\w\[\],{}/* ]+))")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_FREE_OPS = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+             "after-all", "iota", "partition-id", "replica-id"}
+
+
+def _shape_elems(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _shapes_bytes(text: str) -> float:
+    return sum(_shape_elems(dims) * _DTYPE_BYTES.get(dt, 4)
+               for dt, dims in _SHAPE_RE.findall(text))
+
+
+class _Computation:
+    def __init__(self, header: str):
+        m = _COMP_HDR_RE.match(header)
+        self.name = m.group(1)
+        self.lines: List[str] = []
+        self.shapes: Dict[str, str] = {}
+        # parameters declared in the header: "pname: TYPE"
+        for pm in re.finditer(r"([\w.\-]+):\s*", m.group(2)):
+            pname = pm.group(1)
+            rest = m.group(2)[pm.end():]
+            # take the shape text up to the next ", name:" or end
+            nxt = re.search(r",\s*[\w.\-]+:\s*", rest)
+            self.shapes[pname] = rest[:nxt.start()] if nxt else rest
+
+    def add(self, line: str):
+        self.lines.append(line)
+        m = _OP_RE.match(line)
+        if m:
+            name, result_part, _ = m.groups()
+            self.shapes[name] = result_part
+
+
+def _split_computations(hlo: str) -> Dict[str, _Computation]:
+    comps: Dict[str, _Computation] = {}
+    current = None
+    for line in hlo.splitlines():
+        if line.rstrip().endswith("{") and _COMP_HDR_RE.match(line):
+            current = _Computation(line)
+            comps[current.name] = current
+            continue
+        if current is not None:
+            if line.strip() == "}":
+                current = None
+            else:
+                current.add(line)
+    return comps
+
+
+def _dot_flops(line: str, comp: _Computation) -> float:
+    eq = line.index("=")
+    dot_at = line.index(" dot(")
+    result_elems = sum(_shape_elems(d)
+                       for _, d in _SHAPE_RE.findall(line[eq + 1:dot_at]))
+    args_txt = line[dot_at + 5:line.index(")", dot_at)]
+    arg_names = _ARG_RE.findall(args_txt)
+    inline_shapes = _SHAPE_RE.findall(args_txt)
+    if inline_shapes:
+        lhs_dims = [int(d) for d in inline_shapes[0][1].split(",") if d]
+    elif arg_names:
+        lhs_shape = comp.shapes.get(arg_names[0], "")
+        ms = _SHAPE_RE.search(lhs_shape)
+        lhs_dims = [int(d) for d in ms.group(2).split(",") if d] if ms else []
+    else:
+        lhs_dims = []
+    m = _CONTRACT_RE.search(line)
+    contract = 1
+    if m and lhs_dims:
+        for idx in m.group(1).split(","):
+            if idx:
+                contract *= lhs_dims[int(idx)]
+    return 2.0 * result_elems * contract
+
+
+def _collective_wire(line: str, op: str) -> float:
+    eq = line.index("=")
+    paren = line.index(f" {op}", eq)
+    out_bytes = _shapes_bytes(line[eq + 1:paren])
+    g = _GROUPS_RE.search(line)
+    group = 2
+    if g:
+        if g.group(1) is not None:
+            group = max(len([x for x in g.group(1).split(",") if x.strip()]), 1)
+        else:
+            group = max(int(g.group(3)), 1)
+    s = max(group, 2)
+    ring = (s - 1) / s
+    if op.startswith("all-reduce"):
+        return 2 * ring * out_bytes
+    if op.startswith("all-gather"):
+        return ring * out_bytes
+    if op.startswith("reduce-scatter"):
+        return ring * out_bytes * s
+    if op.startswith("all-to-all"):
+        return ring * out_bytes
+    return out_bytes  # collective-permute
+
+
+class HloCost:
+    def __init__(self, hlo_text: str):
+        self.comps = _split_computations(hlo_text)
+        self._cache: Dict[Tuple[str, bool], tuple] = {}
+        self.unknown_trip_loops = 0
+        entry_m = re.search(r"^ENTRY\s+%?([\w.\-]+)", hlo_text, re.M)
+        self.entry = entry_m.group(1) if entry_m else list(self.comps)[-1]
+
+    def analyze(self) -> dict:
+        flops, bytes_, wire, per_op = self._walk(self.entry, flops_only=False)
+        return {
+            "flops": flops,
+            "bytes": bytes_,
+            "collective_wire_bytes": wire,
+            "collective_ops": dict(per_op),
+            "unknown_trip_loops": self.unknown_trip_loops,
+        }
+
+    def _walk(self, comp_name: str, flops_only: bool):
+        key = (comp_name, flops_only)
+        if key in self._cache:
+            return self._cache[key]
+        self._cache[key] = (0.0, 0.0, 0.0, {})  # recursion guard
+        comp = self.comps.get(comp_name)
+        flops = bytes_ = wire = 0.0
+        per_op: Dict[str, float] = defaultdict(float)
+        if comp is None:
+            return 0.0, 0.0, 0.0, per_op
+        for line in comp.lines:
+            m = _OP_RE.match(line)
+            if not m:
+                continue
+            _, result_part, op = m.groups()
+            if op in _FREE_OPS:
+                continue
+            if op == "dot":
+                flops += _dot_flops(line, comp)
+                if not flops_only:
+                    bytes_ += _shapes_bytes(result_part) * 2  # approx io
+                continue
+            if op == "while":
+                trip = 1
+                t = _TRIP_RE.search(line)
+                if t:
+                    trip = int(t.group(1))
+                else:
+                    self.unknown_trip_loops += 1
+                b = _BODY_RE.search(line)
+                if b:
+                    f2, b2, w2, p2 = self._walk(b.group(1), flops_only)
+                    flops += trip * f2
+                    bytes_ += trip * b2
+                    wire += trip * w2
+                    for k, v in p2.items():
+                        per_op[k] += trip * v
+                continue
+            if op == "fusion":
+                called = _CALLS_RE.search(line)
+                if called:
+                    f2, _, _, _ = self._walk(called.group(1), True)
+                    flops += f2
+                if not flops_only:
+                    bytes_ += _shapes_bytes(line)
+                continue
+            if op in ("call", "conditional", "async-start"):
+                called = _CALLS_RE.search(line) or _CALLS_RE.search(line)
+                target = (_CALLS_RE.search(line) or _BODY_RE.search(line))
+                if target:
+                    f2, b2, w2, p2 = self._walk(target.group(1), flops_only)
+                    flops += f2
+                    bytes_ += b2
+                    wire += w2
+                    for k, v in p2.items():
+                        per_op[k] += v
+                continue
+            base_op = op.replace("-start", "").replace("-done", "")
+            if base_op in COLLECTIVES:
+                if not op.endswith("-done"):
+                    w = _collective_wire(line, op)
+                    wire += w
+                    per_op[base_op] += w
+                    if not flops_only:
+                        bytes_ += _shapes_bytes(result_part)
+                continue
+            if not flops_only:
+                bytes_ += _shapes_bytes(line)
+        out = (flops, bytes_, wire, dict(per_op))
+        self._cache[key] = out
+        return out
+
+
+def analyze_hlo(hlo_text: str) -> dict:
+    return HloCost(hlo_text).analyze()

@@ -1,0 +1,21 @@
+"""Production mesh definitions (brief: 16x16 single pod, 2x16x16 multi-pod).
+
+A function, not a module-level constant, so importing never touches jax
+device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_smoke_mesh(n_devices: int = 1):
+    """Single-host mesh for tests: (1, n) data x model."""
+    return jax.make_mesh((1, n_devices), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)

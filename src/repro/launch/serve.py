@@ -1,0 +1,78 @@
+"""Batched click-prediction serving driver.
+
+    PYTHONPATH=src python -m repro.launch.serve --model dbn \
+        [--ckpt-dir ckpts/dbn] [--requests 50] [--batch 512]
+
+Loads the latest checkpoint (or fresh-initializes), then serves batched
+request streams through the jit'd unconditional-click path, reporting
+latency percentiles and throughput — the serve-side counterpart of
+launch/train.py. The dry-run covers the sharded multi-pod variant.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Compression, EmbeddingParameterConfig, MODEL_REGISTRY
+from repro.train import CheckpointManager
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="dbn", choices=sorted(MODEL_REGISTRY))
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--pairs", type=int, default=1_000_000)
+    ap.add_argument("--requests", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=512)
+    ap.add_argument("--positions", type=int, default=10)
+    args = ap.parse_args()
+
+    attraction = EmbeddingParameterConfig(
+        parameters=args.pairs, compression=Compression.HASH,
+        compression_ratio=10.0, baseline_correction=True, init_logit=-2.0)
+    model = MODEL_REGISTRY[args.model](query_doc_pairs=args.pairs,
+                                       positions=args.positions,
+                                       attraction=attraction)
+    params = model.init(jax.random.PRNGKey(0))
+    if args.ckpt_dir:
+        ckpt = CheckpointManager(args.ckpt_dir)
+        if ckpt.latest_step() is not None:
+            tree, _, step = ckpt.restore(like={"params": params})
+            params = tree["params"]
+            print(f"[serve] restored step {step} from {args.ckpt_dir}")
+
+    serve = jax.jit(model.predict_clicks)
+    rng = np.random.default_rng(0)
+
+    def request(batch):
+        return {
+            "positions": jnp.asarray(np.tile(np.arange(1, args.positions + 1),
+                                             (batch, 1)), jnp.int32),
+            "query_doc_ids": jnp.asarray(
+                rng.integers(0, args.pairs, (batch, args.positions)),
+                jnp.int32),
+            "clicks": jnp.zeros((batch, args.positions), jnp.float32),
+            "mask": jnp.ones((batch, args.positions), bool),
+        }
+
+    # warmup compile
+    jax.block_until_ready(serve(params, request(args.batch)))
+    lat = []
+    for _ in range(args.requests):
+        b = request(args.batch)
+        t0 = time.perf_counter()
+        jax.block_until_ready(serve(params, b))
+        lat.append((time.perf_counter() - t0) * 1e3)
+    lat = np.asarray(lat)
+    print(f"[serve] {args.requests} requests x batch {args.batch}: "
+          f"p50={np.percentile(lat, 50):.2f}ms "
+          f"p99={np.percentile(lat, 99):.2f}ms "
+          f"throughput={args.batch / lat.mean() * 1e3:.0f} sessions/s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Production training launcher for CLAX click models.
+
+    PYTHONPATH=src python -m repro.launch.train --model ubm \
+        [--sessions 200000] [--epochs 20] [--ckpt-dir ckpts/ubm] \
+        [--compression hash --ratio 10] [--host-id 0 --host-count 1]
+
+Single-host here; at pod scale the same entry point runs per host with
+--host-id/--host-count carving the data shard (repro/data/loader.py) and
+jax.distributed initializing the mesh — the dry-run (repro/launch/dryrun.py)
+proves the sharded program compiles for the production meshes.
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro import optim
+from repro.core import (Compression, EmbeddingParameterConfig, MODEL_REGISTRY)
+from repro.data import ClickLogLoader, SyntheticConfig, generate_click_log, split_sessions
+from repro.train import Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="ubm", choices=sorted(MODEL_REGISTRY))
+    ap.add_argument("--sessions", type=int, default=200_000)
+    ap.add_argument("--epochs", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=2048)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--compression", default="none",
+                    choices=["none", "hash", "quotient_remainder"])
+    ap.add_argument("--ratio", type=float, default=10.0)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--host-id", type=int, default=0)
+    ap.add_argument("--host-count", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = SyntheticConfig(n_sessions=args.sessions, n_queries=args.sessions // 100,
+                          docs_per_query=20, positions=10, behavior="dbn",
+                          seed=args.seed)
+    data, _ = generate_click_log(cfg)
+    train, val, test = split_sessions(data, (0.8, 0.1, 0.1), seed=args.seed)
+
+    attraction = EmbeddingParameterConfig(
+        parameters=cfg.n_query_doc_pairs,
+        compression=Compression(args.compression),
+        compression_ratio=args.ratio,
+        baseline_correction=True, init_logit=-2.0)
+    model = MODEL_REGISTRY[args.model](
+        query_doc_pairs=cfg.n_query_doc_pairs, positions=10,
+        attraction=attraction)
+
+    trainer = Trainer(optimizer=optim.adamw(args.lr, weight_decay=1e-4),
+                      epochs=args.epochs, patience=1,
+                      checkpoint_dir=args.ckpt_dir,
+                      checkpoint_every_steps=200 if args.ckpt_dir else None,
+                      handle_preemption=True)
+    loader = ClickLogLoader(train, batch_size=args.batch, seed=args.seed,
+                            host_id=args.host_id, host_count=args.host_count)
+    trainer.train(model, loader,
+                  ClickLogLoader(val, batch_size=8192, shuffle=False,
+                                 drop_last=False),
+                  resume=bool(args.ckpt_dir))
+    results = trainer.test(model, ClickLogLoader(test, batch_size=8192, shuffle=False,
+                                                 drop_last=False))
+    print("[train] test:", {k: round(v, 4) for k, v in results.items()
+                            if k != "per_rank"})
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""Assigned architectures: LM transformers, GraphSAGE, recsys models."""

@@ -1,0 +1,24 @@
+from repro.models.gnn.graphsage import (
+    SAGEConfig,
+    init_params,
+    param_specs,
+    full_graph_forward,
+    sampled_forward,
+    node_classification_loss,
+    make_full_graph_train_step,
+    make_sampled_train_step,
+)
+from repro.models.gnn.sampler import NeighborSampler, random_graph
+
+__all__ = [
+    "SAGEConfig",
+    "init_params",
+    "param_specs",
+    "full_graph_forward",
+    "sampled_forward",
+    "node_classification_loss",
+    "make_full_graph_train_step",
+    "make_sampled_train_step",
+    "NeighborSampler",
+    "random_graph",
+]

@@ -1,0 +1,26 @@
+"""Decoder-only LM family: dense (llama3/phi3) and MoE (granite/llama4)."""
+from repro.models.lm.transformer import (
+    LMConfig,
+    init_params,
+    param_specs,
+    forward,
+    lm_loss,
+    make_train_step,
+    make_prefill_step,
+    make_decode_step,
+    init_cache,
+    cache_specs,
+)
+
+__all__ = [
+    "LMConfig",
+    "init_params",
+    "param_specs",
+    "forward",
+    "lm_loss",
+    "make_train_step",
+    "make_prefill_step",
+    "make_decode_step",
+    "init_cache",
+    "cache_specs",
+]

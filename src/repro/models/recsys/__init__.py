@@ -1,0 +1,13 @@
+from repro.models.recsys.embedding import TableConfig, init_table, table_lookup, table_spec
+from repro.models.recsys.deepfm import DeepFMConfig, DeepFM
+from repro.models.recsys.autoint import AutoIntConfig, AutoInt
+from repro.models.recsys.bst import BSTConfig, BST
+from repro.models.recsys.mind import MINDConfig, MIND
+
+__all__ = [
+    "TableConfig", "init_table", "table_lookup", "table_spec",
+    "DeepFMConfig", "DeepFM",
+    "AutoIntConfig", "AutoInt",
+    "BSTConfig", "BST",
+    "MINDConfig", "MIND",
+]

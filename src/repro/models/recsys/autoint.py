@@ -1,0 +1,105 @@
+"""AutoInt [Song et al. 2018, arXiv:1810.11921]: self-attention feature
+interaction over field embeddings, with residual projections."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import optim as optim_lib
+from repro.kernels import flash_attention
+from repro.models.recsys.embedding import TableConfig, init_table, table_lookup, table_spec
+from repro.stable import log_bce, log_sigmoid
+
+
+@dataclasses.dataclass
+class AutoIntConfig:
+    name: str = "autoint"
+    n_sparse: int = 39
+    embed_dim: int = 16
+    n_attn_layers: int = 3
+    n_heads: int = 2
+    d_attn: int = 32
+    table_rows: int = 80_000_000
+    compression: str = "none"
+    compression_ratio: float = 1.0
+    dtype: Any = jnp.float32
+
+    @property
+    def table(self) -> TableConfig:
+        return TableConfig(self.table_rows, self.embed_dim, self.compression,
+                           self.compression_ratio)
+
+
+class AutoInt:
+    def __init__(self, cfg: AutoIntConfig):
+        self.cfg = cfg
+
+    def _layer_dims(self):
+        dims = [self.cfg.embed_dim] + [self.cfg.d_attn] * self.cfg.n_attn_layers
+        return dims
+
+    def init(self, rng):
+        cfg = self.cfg
+        dims = self._layer_dims()
+        keys = jax.random.split(rng, 4 * cfg.n_attn_layers + 2)
+        params = {"embedding": init_table(cfg.table, keys[0])}
+        for l in range(cfg.n_attn_layers):
+            d_in, d_out = dims[l], dims[l + 1]
+            std = (1.0 / d_in) ** 0.5
+            params[f"attn_{l}"] = {
+                "wq": (jax.random.normal(keys[4 * l + 1], (d_in, d_out)) * std),
+                "wk": (jax.random.normal(keys[4 * l + 2], (d_in, d_out)) * std),
+                "wv": (jax.random.normal(keys[4 * l + 3], (d_in, d_out)) * std),
+                "w_res": (jax.random.normal(keys[4 * l + 4], (d_in, d_out)) * std),
+            }
+        params["head"] = {
+            "w": (jax.random.normal(keys[-1], (cfg.n_sparse * dims[-1], 1))
+                  * (1.0 / (cfg.n_sparse * dims[-1])) ** 0.5),
+            "b": jnp.zeros((1,), jnp.float32),
+        }
+        return params
+
+    def param_specs(self, mesh):
+        like = jax.eval_shape(lambda: self.init(jax.random.PRNGKey(0)))
+        specs = jax.tree_util.tree_map(lambda _: P(), like)
+        specs["embedding"] = table_spec(self.cfg.table)
+        return specs
+
+    def forward(self, params, batch: Dict[str, jax.Array]) -> jax.Array:
+        cfg = self.cfg
+        h = table_lookup(cfg.table, params["embedding"], batch["field_ids"])
+        for l in range(cfg.n_attn_layers):
+            lp = params[f"attn_{l}"]
+            B, F, _ = h.shape
+            q = (h @ lp["wq"]).reshape(B, F, cfg.n_heads, -1).transpose(0, 2, 1, 3)
+            k = (h @ lp["wk"]).reshape(B, F, cfg.n_heads, -1).transpose(0, 2, 1, 3)
+            v = (h @ lp["wv"]).reshape(B, F, cfg.n_heads, -1).transpose(0, 2, 1, 3)
+            attn = flash_attention(q, k, v, causal=False)
+            attn = attn.transpose(0, 2, 1, 3).reshape(B, F, -1)
+            h = jax.nn.relu(attn + h @ lp["w_res"])
+        flat = h.reshape(h.shape[0], -1)
+        return (flat @ params["head"]["w"])[..., 0] + params["head"]["b"][0]
+
+    def loss(self, params, batch) -> jax.Array:
+        log_p = log_sigmoid(self.forward(params, batch))
+        return jnp.mean(log_bce(log_p, batch["labels"]))
+
+    def make_train_step(self, optimizer=None):
+        optimizer = optimizer or optim_lib.adamw(1e-3)
+
+        def step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(self.loss)(params, batch)
+            updates, opt_state = optimizer.update(grads, opt_state, params)
+            return optim_lib.apply_updates(params, updates), opt_state, loss
+
+        return step
+
+    def serve(self, params, batch) -> jax.Array:
+        return log_sigmoid(self.forward(params, batch))
+
+    def retrieval_score(self, params, batch) -> jax.Array:
+        return self.forward(params, batch)

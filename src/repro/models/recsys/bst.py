@@ -1,0 +1,141 @@
+"""Behavior Sequence Transformer [Chen et al. 2019, arXiv:1905.06874]:
+transformer block over the user's behavior sequence + target item, MLP head.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import optim as optim_lib
+from repro.kernels import flash_attention
+from repro.models.recsys.embedding import TableConfig, init_table, table_lookup, table_spec
+from repro.nn import MLP
+from repro.stable import log_bce, log_sigmoid
+
+
+@dataclasses.dataclass
+class BSTConfig:
+    name: str = "bst"
+    embed_dim: int = 32
+    seq_len: int = 20            # behavior history length (target appended)
+    n_blocks: int = 1
+    n_heads: int = 8
+    d_ff: int = 128
+    mlp: Sequence[int] = (1024, 512, 256)
+    item_vocab: int = 20_000_000
+    compression: str = "none"
+    compression_ratio: float = 1.0
+    dtype: Any = jnp.float32
+
+    @property
+    def table(self) -> TableConfig:
+        return TableConfig(self.item_vocab, self.embed_dim, self.compression,
+                           self.compression_ratio)
+
+    @property
+    def total_len(self) -> int:
+        return self.seq_len + 1
+
+
+class BST:
+    def __init__(self, cfg: BSTConfig):
+        self.cfg = cfg
+        self.mlp = MLP(cfg.total_len * cfg.embed_dim, list(cfg.mlp), 1,
+                       activation="relu")
+
+    def init(self, rng):
+        cfg = self.cfg
+        keys = jax.random.split(rng, 3 + 6 * cfg.n_blocks)
+        D = cfg.embed_dim
+        std = (1.0 / D) ** 0.5
+        params = {
+            "embedding": init_table(cfg.table, keys[0]),
+            "pos_embed": (jax.random.normal(keys[1], (cfg.total_len, D)) * 0.02),
+            "mlp": self.mlp.init(keys[2]),
+        }
+        for b in range(cfg.n_blocks):
+            k = keys[3 + 6 * b: 9 + 6 * b]
+            params[f"block_{b}"] = {
+                "wq": jax.random.normal(k[0], (D, D)) * std,
+                "wk": jax.random.normal(k[1], (D, D)) * std,
+                "wv": jax.random.normal(k[2], (D, D)) * std,
+                "wo": jax.random.normal(k[3], (D, D)) * std,
+                "ff1": jax.random.normal(k[4], (D, cfg.d_ff)) * std,
+                "ff2": jax.random.normal(k[5], (cfg.d_ff, D)) * (1.0 / cfg.d_ff) ** 0.5,
+                "ln1": jnp.ones((D,), jnp.float32),
+                "ln2": jnp.ones((D,), jnp.float32),
+            }
+        return params
+
+    def param_specs(self, mesh):
+        like = jax.eval_shape(lambda: self.init(jax.random.PRNGKey(0)))
+        specs = jax.tree_util.tree_map(lambda _: P(), like)
+        specs["embedding"] = table_spec(self.cfg.table)
+        return specs
+
+    @staticmethod
+    def _ln(x, scale):
+        xf = x.astype(jnp.float32)
+        mu = jnp.mean(xf, -1, keepdims=True)
+        var = jnp.var(xf, -1, keepdims=True)
+        return ((xf - mu) * jax.lax.rsqrt(var + 1e-6) * scale).astype(x.dtype)
+
+    def encode(self, params, batch) -> jax.Array:
+        """history_ids (B, L) + target_ids (B,) -> (B, total_len, D)."""
+        cfg = self.cfg
+        seq_ids = jnp.concatenate(
+            [batch["history_ids"], batch["target_ids"][:, None]], axis=1)
+        h = table_lookup(cfg.table, params["embedding"], seq_ids)
+        h = h + params["pos_embed"][None]
+        for b in range(cfg.n_blocks):
+            bp = params[f"block_{b}"]
+            x = self._ln(h, bp["ln1"])
+            B, S, D = x.shape
+            hd = D // cfg.n_heads
+            q = (x @ bp["wq"]).reshape(B, S, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+            k = (x @ bp["wk"]).reshape(B, S, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+            v = (x @ bp["wv"]).reshape(B, S, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+            a = flash_attention(q, k, v, causal=False)
+            a = a.transpose(0, 2, 1, 3).reshape(B, S, D)
+            h = h + a @ bp["wo"]
+            x = self._ln(h, bp["ln2"])
+            h = h + jax.nn.relu(x @ bp["ff1"]) @ bp["ff2"]
+        return h
+
+    def forward(self, params, batch) -> jax.Array:
+        h = self.encode(params, batch)
+        flat = h.reshape(h.shape[0], -1)
+        return self.mlp(params["mlp"], flat)[..., 0]
+
+    def loss(self, params, batch) -> jax.Array:
+        log_p = log_sigmoid(self.forward(params, batch))
+        return jnp.mean(log_bce(log_p, batch["labels"]))
+
+    def make_train_step(self, optimizer=None):
+        optimizer = optimizer or optim_lib.adamw(1e-3)
+
+        def step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(self.loss)(params, batch)
+            updates, opt_state = optimizer.update(grads, opt_state, params)
+            return optim_lib.apply_updates(params, updates), opt_state, loss
+
+        return step
+
+    def serve(self, params, batch) -> jax.Array:
+        return log_sigmoid(self.forward(params, batch))
+
+    def retrieval_score(self, params, batch) -> jax.Array:
+        """Two-tower factorization for candidate scoring: mean-pooled history
+        encoding (computed once) dotted against 1M candidate item embeddings —
+        a single batched matmul (the standard serving approximation for
+        sequence rankers at retrieval stage)."""
+        cfg = self.cfg
+        hist = table_lookup(cfg.table, params["embedding"], batch["history_ids"])
+        user_vec = jnp.mean(hist + params["pos_embed"][None, :cfg.seq_len], axis=1)
+        cand = table_lookup(cfg.table, params["embedding"],
+                            batch["candidate_ids"])  # (C, D)
+        return jnp.einsum("bd,cd->bc", user_vec, cand)

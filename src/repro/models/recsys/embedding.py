@@ -1,0 +1,73 @@
+"""Shared huge-table embedding substrate for the recsys archs.
+
+This is the paper's §4.2 scale machinery applied outside click models: one
+unified table (fields reach it via offsets), optional hashing-trick or
+quotient-remainder compression, row-sharding over the ``model`` mesh axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.parameterization import SHARD_MULTIPLE, _round_up, hash_ids
+
+
+@dataclasses.dataclass
+class TableConfig:
+    rows: int
+    dim: int
+    compression: str = "none"           # none | hash | qr
+    compression_ratio: float = 1.0
+    param_dtype: Any = jnp.float32
+
+    @property
+    def stored_rows(self) -> int:
+        if self.compression == "hash":
+            return _round_up(
+                max(int(self.rows / max(self.compression_ratio, 1.0)), 2))
+        return self.rows
+
+    @property
+    def qr_rem_rows(self) -> int:
+        return _round_up(
+            max(int(self.rows / max(self.compression_ratio, 1.0) / 2), 2))
+
+    @property
+    def qr_quot_rows(self) -> int:
+        return _round_up(int(-(-self.rows // self.qr_rem_rows)))
+
+
+def init_table(cfg: TableConfig, rng: jax.Array, stddev: float = 0.02) -> Dict:
+    if cfg.compression == "qr":
+        k1, k2 = jax.random.split(rng)
+        return {
+            "quotient": (jax.random.normal(k1, (cfg.qr_quot_rows, cfg.dim))
+                         * stddev).astype(cfg.param_dtype),
+            "remainder": (jax.random.normal(k2, (cfg.qr_rem_rows, cfg.dim))
+                          * stddev).astype(cfg.param_dtype),
+        }
+    return {"table": (jax.random.normal(rng, (cfg.stored_rows, cfg.dim))
+                      * stddev).astype(cfg.param_dtype)}
+
+
+def table_lookup(cfg: TableConfig, params: Dict, ids: jax.Array) -> jax.Array:
+    """ids (...,) -> embeddings (..., dim)."""
+    if cfg.compression == "hash":
+        return jnp.take(params["table"], hash_ids(ids, cfg.stored_rows), axis=0)
+    if cfg.compression == "qr":
+        q = jnp.take(params["quotient"],
+                     (ids // cfg.qr_rem_rows) % cfg.qr_quot_rows, axis=0)
+        r = jnp.take(params["remainder"], ids % cfg.qr_rem_rows, axis=0)
+        return q * r
+    return jnp.take(params["table"], jnp.clip(ids, 0, cfg.stored_rows - 1), axis=0)
+
+
+def table_spec(cfg: TableConfig) -> Dict:
+    """Row-sharded over 'model' (both QR components too)."""
+    if cfg.compression == "qr":
+        return {"quotient": P("model", None), "remainder": P("model", None)}
+    return {"table": P("model", None)}

@@ -1,0 +1,34 @@
+"""Minimal pure-pytree neural-network substrate.
+
+The offline container has no flax/optax, so CLAX ships its own small module
+system: a Module is a structure-only Python object with
+``init(rng) -> params`` (a nested-dict pytree of jnp arrays) and
+``__call__(params, *inputs) -> outputs``. Params are plain pytrees, so they
+compose directly with jax.jit / pjit / shard_map and our optimizers.
+"""
+from repro.nn.module import Module, split_rngs
+from repro.nn import init
+from repro.nn.layers import (
+    Dense,
+    Embedding,
+    LayerNorm,
+    RMSNorm,
+    MLP,
+    DeepCrossV2,
+    Sequential,
+    Scalar,
+)
+
+__all__ = [
+    "Module",
+    "split_rngs",
+    "init",
+    "Dense",
+    "Embedding",
+    "LayerNorm",
+    "RMSNorm",
+    "MLP",
+    "DeepCrossV2",
+    "Sequential",
+    "Scalar",
+]

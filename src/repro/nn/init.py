@@ -1,0 +1,72 @@
+"""Parameter initializers (shape, dtype) -> array factories."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def zeros(rng, shape, dtype=jnp.float32):
+    del rng
+    return jnp.zeros(shape, dtype)
+
+
+def ones(rng, shape, dtype=jnp.float32):
+    del rng
+    return jnp.ones(shape, dtype)
+
+
+def constant(value):
+    def _init(rng, shape, dtype=jnp.float32):
+        del rng
+        return jnp.full(shape, value, dtype)
+
+    return _init
+
+
+def normal(stddev=0.02):
+    def _init(rng, shape, dtype=jnp.float32):
+        return (jax.random.normal(rng, shape) * stddev).astype(dtype)
+
+    return _init
+
+
+def truncated_normal(stddev=0.02):
+    def _init(rng, shape, dtype=jnp.float32):
+        return (jax.random.truncated_normal(rng, -2.0, 2.0, shape) * stddev).astype(dtype)
+
+    return _init
+
+
+def _fans(shape):
+    if len(shape) == 1:
+        return shape[0], shape[0]
+    receptive = 1
+    for s in shape[:-2]:
+        receptive *= s
+    return shape[-2] * receptive, shape[-1] * receptive
+
+
+def lecun_normal():
+    def _init(rng, shape, dtype=jnp.float32):
+        fan_in, _ = _fans(shape)
+        std = (1.0 / max(fan_in, 1)) ** 0.5
+        return (jax.random.truncated_normal(rng, -2.0, 2.0, shape) * std).astype(dtype)
+
+    return _init
+
+
+def glorot_uniform():
+    def _init(rng, shape, dtype=jnp.float32):
+        fan_in, fan_out = _fans(shape)
+        limit = (6.0 / max(fan_in + fan_out, 1)) ** 0.5
+        return jax.random.uniform(rng, shape, minval=-limit, maxval=limit).astype(dtype)
+
+    return _init
+
+
+def logit_of_prob(p: float):
+    """Initialize a parameter so sigmoid(param) == p (CLAX CTR-style init)."""
+    import math
+
+    v = math.log(p) - math.log1p(-p)
+    return constant(v)

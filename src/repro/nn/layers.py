@@ -1,0 +1,216 @@
+"""Core layers for the pure-pytree substrate."""
+from __future__ import annotations
+
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import init as initializers
+from repro.nn.module import Module, split_rngs
+
+ACTIVATIONS = {
+    "relu": jax.nn.relu,
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+    "tanh": jnp.tanh,
+    "identity": lambda x: x,
+}
+
+
+class Dense(Module):
+    """y = x @ W + b."""
+
+    def __init__(self, in_features: int, out_features: int, use_bias: bool = True,
+                 kernel_init=None, dtype=jnp.float32, param_dtype=jnp.float32):
+        self.in_features = in_features
+        self.out_features = out_features
+        self.use_bias = use_bias
+        self.kernel_init = kernel_init or initializers.lecun_normal()
+        self.dtype = dtype
+        self.param_dtype = param_dtype
+
+    def init(self, rng):
+        kw, _ = split_rngs(rng, 2)
+        params = {"kernel": self.kernel_init(kw, (self.in_features, self.out_features), self.param_dtype)}
+        if self.use_bias:
+            params["bias"] = jnp.zeros((self.out_features,), self.param_dtype)
+        return params
+
+    def __call__(self, params, x):
+        y = jnp.dot(x.astype(self.dtype), params["kernel"].astype(self.dtype))
+        if self.use_bias:
+            y = y + params["bias"].astype(self.dtype)
+        return y
+
+
+class Scalar(Module):
+    """A single learnable scalar (or small vector) logit, e.g. GCTR's rho."""
+
+    def __init__(self, shape=(), init_fn=None, param_dtype=jnp.float32):
+        self.shape = tuple(shape)
+        self.init_fn = init_fn or initializers.zeros
+        self.param_dtype = param_dtype
+
+    def init(self, rng):
+        return {"value": self.init_fn(rng, self.shape, self.param_dtype)}
+
+    def __call__(self, params):
+        return params["value"]
+
+
+class Embedding(Module):
+    """Plain dense embedding table: ids -> rows."""
+
+    def __init__(self, num_embeddings: int, features: int, embedding_init=None,
+                 param_dtype=jnp.float32, dtype=jnp.float32):
+        self.num_embeddings = num_embeddings
+        self.features = features
+        self.embedding_init = embedding_init or initializers.normal(0.02)
+        self.param_dtype = param_dtype
+        self.dtype = dtype
+
+    def init(self, rng):
+        return {"table": self.embedding_init(rng, (self.num_embeddings, self.features), self.param_dtype)}
+
+    def __call__(self, params, ids):
+        return jnp.take(params["table"], ids, axis=0).astype(self.dtype)
+
+
+class LayerNorm(Module):
+    def __init__(self, features: int, eps: float = 1e-6, dtype=jnp.float32,
+                 param_dtype=jnp.float32, use_bias: bool = True):
+        self.features = features
+        self.eps = eps
+        self.dtype = dtype
+        self.param_dtype = param_dtype
+        self.use_bias = use_bias
+
+    def init(self, rng):
+        del rng
+        p = {"scale": jnp.ones((self.features,), self.param_dtype)}
+        if self.use_bias:
+            p["bias"] = jnp.zeros((self.features,), self.param_dtype)
+        return p
+
+    def __call__(self, params, x):
+        xf = x.astype(jnp.float32)
+        mean = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mean) * jax.lax.rsqrt(var + self.eps)
+        y = y * params["scale"].astype(jnp.float32)
+        if self.use_bias:
+            y = y + params["bias"].astype(jnp.float32)
+        return y.astype(self.dtype)
+
+
+class RMSNorm(Module):
+    def __init__(self, features: int, eps: float = 1e-6, dtype=jnp.float32,
+                 param_dtype=jnp.float32):
+        self.features = features
+        self.eps = eps
+        self.dtype = dtype
+        self.param_dtype = param_dtype
+
+    def init(self, rng):
+        del rng
+        return {"scale": jnp.ones((self.features,), self.param_dtype)}
+
+    def __call__(self, params, x):
+        xf = x.astype(jnp.float32)
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + self.eps) * params["scale"].astype(jnp.float32)
+        return y.astype(self.dtype)
+
+
+class MLP(Module):
+    """Multi-layer perceptron with configurable hidden dims + activation."""
+
+    def __init__(self, in_features: int, hidden: Sequence[int], out_features: int,
+                 activation: str = "relu", final_activation: str = "identity",
+                 use_bias: bool = True, dtype=jnp.float32, param_dtype=jnp.float32):
+        dims = [in_features, *hidden, out_features]
+        self.layers = [
+            Dense(dims[i], dims[i + 1], use_bias=use_bias, dtype=dtype,
+                  param_dtype=param_dtype)
+            for i in range(len(dims) - 1)
+        ]
+        self.activation = ACTIVATIONS[activation]
+        self.final_activation = ACTIVATIONS[final_activation]
+
+    def init(self, rng):
+        keys = split_rngs(rng, len(self.layers))
+        return {f"layer_{i}": l.init(k) for i, (l, k) in enumerate(zip(self.layers, keys))}
+
+    def __call__(self, params, x):
+        n = len(self.layers)
+        for i, layer in enumerate(self.layers):
+            x = layer(params[f"layer_{i}"], x)
+            x = self.activation(x) if i < n - 1 else self.final_activation(x)
+        return x
+
+
+class DeepCrossV2(Module):
+    """DCN-V2 [Wang et al. 2021]: explicit feature crosses + deep network.
+
+    cross layer: x_{l+1} = x0 * (W_l x_l + b_l) + x_l
+    combination: "stacked" (cross -> deep) or "parallel" (concat(cross, deep)).
+    Final projection to ``out_features``.
+    """
+
+    def __init__(self, in_features: int, cross_layers: int = 2, deep_layers: int = 2,
+                 deep_width: Optional[int] = None, out_features: int = 1,
+                 combination: str = "stacked", dtype=jnp.float32,
+                 param_dtype=jnp.float32):
+        self.in_features = in_features
+        self.cross_layers = cross_layers
+        self.combination = combination
+        deep_width = deep_width or in_features
+        self.cross = [Dense(in_features, in_features, dtype=dtype, param_dtype=param_dtype)
+                      for _ in range(cross_layers)]
+        deep_in = in_features
+        self.deep = MLP(deep_in, [deep_width] * max(deep_layers - 1, 0), deep_width,
+                        activation="relu", final_activation="relu",
+                        dtype=dtype, param_dtype=param_dtype) if deep_layers > 0 else None
+        head_in = deep_width if combination == "stacked" else in_features + (deep_width if self.deep else 0)
+        if self.deep is None:
+            head_in = in_features
+        self.head = Dense(head_in, out_features, dtype=dtype, param_dtype=param_dtype)
+
+    def init(self, rng):
+        keys = split_rngs(rng, len(self.cross) + 2)
+        params = {f"cross_{i}": c.init(keys[i]) for i, c in enumerate(self.cross)}
+        if self.deep is not None:
+            params["deep"] = self.deep.init(keys[-2])
+        params["head"] = self.head.init(keys[-1])
+        return params
+
+    def _cross_stack(self, params, x0):
+        x = x0
+        for i in range(self.cross_layers):
+            x = x0 * self.cross[i](params[f"cross_{i}"], x) + x
+        return x
+
+    def __call__(self, params, x):
+        crossed = self._cross_stack(params, x)
+        if self.deep is None:
+            return self.head(params["head"], crossed)
+        if self.combination == "stacked":
+            h = self.deep(params["deep"], crossed)
+        else:  # parallel
+            h = jnp.concatenate([crossed, self.deep(params["deep"], x)], axis=-1)
+        return self.head(params["head"], h)
+
+
+class Sequential(Module):
+    def __init__(self, modules: Sequence[Module]):
+        self.modules = list(modules)
+
+    def init(self, rng):
+        keys = split_rngs(rng, len(self.modules))
+        return {f"mod_{i}": m.init(k) for i, (m, k) in enumerate(zip(self.modules, keys))}
+
+    def __call__(self, params, x):
+        for i, m in enumerate(self.modules):
+            x = m(params[f"mod_{i}"], x)
+        return x

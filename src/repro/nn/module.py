@@ -1,0 +1,34 @@
+"""Base Module protocol for the pure-pytree NN substrate."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+
+Params = Dict[str, Any]
+
+
+def split_rngs(rng: jax.Array, n: int):
+    """Split an rng key into n keys (tuple)."""
+    return tuple(jax.random.split(rng, n))
+
+
+class Module:
+    """A structure-only module: holds hyperparameters, no state.
+
+    Subclasses implement:
+      * ``init(rng) -> params``: build the parameter pytree.
+      * ``__call__(params, *args, **kwargs)``: pure forward function.
+    """
+
+    def init(self, rng: jax.Array) -> Params:  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def __call__(self, params: Params, *args, **kwargs):  # pragma: no cover
+        raise NotImplementedError
+
+    # Convenience: count parameters of an initialized pytree.
+    @staticmethod
+    def n_params(params: Params) -> int:
+        leaves = jax.tree_util.tree_leaves(params)
+        return int(sum(x.size for x in leaves))

@@ -1,0 +1,35 @@
+"""Optax-equivalent optimizer subset (optax unavailable offline)."""
+from repro.optim.optimizers import (
+    GradientTransformation,
+    adam,
+    adamw,
+    adagrad,
+    sgd,
+    chain,
+    clip_by_global_norm,
+    scale,
+    scale_by_schedule,
+    apply_updates,
+    global_norm,
+    accumulate_gradients,
+)
+from repro.optim.schedules import constant_schedule, cosine_decay, warmup_cosine, linear_decay
+
+__all__ = [
+    "GradientTransformation",
+    "adam",
+    "adamw",
+    "adagrad",
+    "sgd",
+    "chain",
+    "clip_by_global_norm",
+    "scale",
+    "scale_by_schedule",
+    "apply_updates",
+    "global_norm",
+    "accumulate_gradients",
+    "constant_schedule",
+    "cosine_decay",
+    "warmup_cosine",
+    "linear_decay",
+]

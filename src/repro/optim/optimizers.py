@@ -1,0 +1,226 @@
+"""Gradient transformations in the optax style: (init_fn, update_fn) pairs.
+
+update_fn(grads, state, params) -> (updates, new_state); parameters are then
+``params + updates`` via :func:`apply_updates`. All states are pytrees, so the
+whole optimizer composes with jit/pjit and checkpointing.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class GradientTransformation(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Optional[Any]], Tuple[Any, Any]]
+
+
+def _tree_map(f, *trees):
+    return jax.tree_util.tree_map(f, *trees)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def apply_updates(params, updates):
+    return _tree_map(lambda p, u: (p + u.astype(p.dtype)) if p is not None else None,
+                     params, updates)
+
+
+def chain(*transforms: GradientTransformation) -> GradientTransformation:
+    def init(params):
+        return tuple(t.init(params) for t in transforms)
+
+    def update(grads, state, params=None):
+        new_state = []
+        for t, s in zip(transforms, state):
+            grads, s = t.update(grads, s, params)
+            new_state.append(s)
+        return grads, tuple(new_state)
+
+    return GradientTransformation(init, update)
+
+
+def scale(factor: float) -> GradientTransformation:
+    def init(params):
+        del params
+        return ()
+
+    def update(grads, state, params=None):
+        del params
+        return _tree_map(lambda g: g * factor, grads), state
+
+    return GradientTransformation(init, update)
+
+
+def scale_by_schedule(schedule: Callable[[jax.Array], jax.Array]) -> GradientTransformation:
+    def init(params):
+        del params
+        return jnp.zeros((), jnp.int32)
+
+    def update(grads, count, params=None):
+        del params
+        factor = schedule(count)
+        return _tree_map(lambda g: g * factor, grads), count + 1
+
+    return GradientTransformation(init, update)
+
+
+def clip_by_global_norm(max_norm: float) -> GradientTransformation:
+    def init(params):
+        del params
+        return ()
+
+    def update(grads, state, params=None):
+        del params
+        norm = global_norm(grads)
+        factor = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+        return _tree_map(lambda g: g * factor, grads), state
+
+    return GradientTransformation(init, update)
+
+
+class ScaleByAdamState(NamedTuple):
+    count: jax.Array
+    mu: Any
+    nu: Any
+
+
+def scale_by_adam(b1=0.9, b2=0.999, eps=1e-8, moment_dtype=jnp.float32
+                  ) -> GradientTransformation:
+    def init(params):
+        mu = _tree_map(lambda p: jnp.zeros_like(p, dtype=moment_dtype), params)
+        nu = _tree_map(lambda p: jnp.zeros_like(p, dtype=moment_dtype), params)
+        return ScaleByAdamState(jnp.zeros((), jnp.int32), mu, nu)
+
+    def update(grads, state, params=None):
+        del params
+        count = state.count + 1
+        mu = _tree_map(lambda m, g: (b1 * m.astype(jnp.float32)
+                                     + (1 - b1) * g.astype(jnp.float32)
+                                     ).astype(moment_dtype), state.mu, grads)
+        nu = _tree_map(lambda v, g: (b2 * v.astype(jnp.float32)
+                                     + (1 - b2) * jnp.square(g.astype(jnp.float32))
+                                     ).astype(moment_dtype), state.nu, grads)
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+        updates = _tree_map(lambda m, v: (m.astype(jnp.float32) / c1)
+                            / (jnp.sqrt(v.astype(jnp.float32) / c2) + eps), mu, nu)
+        return updates, ScaleByAdamState(count, mu, nu)
+
+    return GradientTransformation(init, update)
+
+
+def add_decayed_weights(weight_decay: float) -> GradientTransformation:
+    def init(params):
+        del params
+        return ()
+
+    def update(grads, state, params=None):
+        if weight_decay == 0.0 or params is None:
+            return grads, state
+        return _tree_map(lambda g, p: g + weight_decay * p.astype(g.dtype), grads, params), state
+
+    return GradientTransformation(init, update)
+
+
+def adam(learning_rate, b1=0.9, b2=0.999, eps=1e-8,
+         moment_dtype=jnp.float32) -> GradientTransformation:
+    return chain(scale_by_adam(b1, b2, eps, moment_dtype),
+                 _scale_by_lr(learning_rate))
+
+
+def adamw(learning_rate, b1=0.9, b2=0.999, eps=1e-8, weight_decay=1e-4,
+          moment_dtype=jnp.float32) -> GradientTransformation:
+    """AdamW (decoupled weight decay) — the paper's default optimizer.
+
+    ``moment_dtype=bf16`` halves optimizer-state memory for 400B-class runs
+    (updates still computed in fp32)."""
+    return chain(scale_by_adam(b1, b2, eps, moment_dtype),
+                 add_decayed_weights(weight_decay),
+                 _scale_by_lr(learning_rate))
+
+
+class ScaleByAdagradState(NamedTuple):
+    accum: Any
+
+
+def adagrad(learning_rate, eps=1e-10, initial_accumulator=0.1) -> GradientTransformation:
+    def init(params):
+        return ScaleByAdagradState(
+            _tree_map(lambda p: jnp.full_like(p, initial_accumulator, dtype=jnp.float32), params))
+
+    def update(grads, state, params=None):
+        del params
+        accum = _tree_map(lambda a, g: a + jnp.square(g.astype(jnp.float32)), state.accum, grads)
+        updates = _tree_map(lambda g, a: g.astype(jnp.float32) / (jnp.sqrt(a) + eps), grads, accum)
+        inner = ScaleByAdagradState(accum)
+        return updates, inner
+
+    return chain(GradientTransformation(init, update), _scale_by_lr(learning_rate))
+
+
+class TraceState(NamedTuple):
+    trace: Any
+
+
+def sgd(learning_rate, momentum: float = 0.0, nesterov: bool = False) -> GradientTransformation:
+    if momentum == 0.0:
+        return _scale_by_lr(learning_rate)
+
+    def init(params):
+        return TraceState(_tree_map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params))
+
+    def update(grads, state, params=None):
+        del params
+        trace = _tree_map(lambda t, g: momentum * t + g.astype(jnp.float32), state.trace, grads)
+        if nesterov:
+            updates = _tree_map(lambda t, g: momentum * t + g.astype(jnp.float32), trace, grads)
+        else:
+            updates = trace
+        return updates, TraceState(trace)
+
+    return chain(GradientTransformation(init, update), _scale_by_lr(learning_rate))
+
+
+def _scale_by_lr(learning_rate) -> GradientTransformation:
+    if callable(learning_rate):
+        return scale_by_schedule(lambda count: -learning_rate(count))
+    return scale(-learning_rate)
+
+
+class AccumulatorState(NamedTuple):
+    step: jax.Array
+    acc: Any
+    inner: Any
+
+
+def accumulate_gradients(inner: GradientTransformation, every: int) -> GradientTransformation:
+    """Gradient accumulation: apply ``inner`` once per ``every`` microbatches."""
+    def init(params):
+        acc = _tree_map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+        return AccumulatorState(jnp.zeros((), jnp.int32), acc, inner.init(params))
+
+    def update(grads, state, params=None):
+        acc = _tree_map(lambda a, g: a + g.astype(jnp.float32), state.acc, grads)
+        step = state.step + 1
+        is_update = (step % every) == 0
+
+        def do_update(_):
+            mean_grads = _tree_map(lambda a: a / every, acc)
+            updates, inner_state = inner.update(mean_grads, state.inner, params)
+            zero = _tree_map(jnp.zeros_like, acc)
+            return updates, inner_state, zero
+
+        def skip(_):
+            zero_updates = _tree_map(jnp.zeros_like, acc)
+            return zero_updates, state.inner, acc
+
+        updates, inner_state, acc_out = jax.lax.cond(is_update, do_update, skip, None)
+        return updates, AccumulatorState(step, acc_out, inner_state)
+
+    return GradientTransformation(init, update)

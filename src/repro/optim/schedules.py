@@ -1,0 +1,40 @@
+"""Learning-rate schedules (step-count -> lr)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_schedule(value: float):
+    def schedule(count):
+        return jnp.asarray(value, jnp.float32)
+
+    return schedule
+
+
+def linear_decay(init_value: float, end_value: float, decay_steps: int):
+    def schedule(count):
+        frac = jnp.clip(count.astype(jnp.float32) / decay_steps, 0.0, 1.0)
+        return init_value + (end_value - init_value) * frac
+
+    return schedule
+
+
+def cosine_decay(init_value: float, decay_steps: int, alpha: float = 0.0):
+    def schedule(count):
+        frac = jnp.clip(count.astype(jnp.float32) / decay_steps, 0.0, 1.0)
+        cosine = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return init_value * ((1 - alpha) * cosine + alpha)
+
+    return schedule
+
+
+def warmup_cosine(peak_value: float, warmup_steps: int, decay_steps: int,
+                  end_value: float = 0.0):
+    def schedule(count):
+        count = count.astype(jnp.float32)
+        warm = peak_value * count / jnp.maximum(warmup_steps, 1)
+        frac = jnp.clip((count - warmup_steps) / jnp.maximum(decay_steps - warmup_steps, 1), 0.0, 1.0)
+        cosine = end_value + (peak_value - end_value) * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.where(count < warmup_steps, warm, cosine)
+
+    return schedule

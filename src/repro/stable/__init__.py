@@ -1,0 +1,28 @@
+"""Numerically stable log-probability operations (paper §5)."""
+from repro.stable.logops import (
+    log1mexp,
+    log_sigmoid,
+    log1m_sigmoid,
+    logsumexp,
+    log_bce,
+    log_not,
+    log_or,
+    log_expm1,
+    logit_to_log_prob,
+    log_prob_to_logit,
+    MIN_LOG_PROB,
+)
+
+__all__ = [
+    "log1mexp",
+    "log_sigmoid",
+    "log1m_sigmoid",
+    "logsumexp",
+    "log_bce",
+    "log_not",
+    "log_or",
+    "log_expm1",
+    "logit_to_log_prob",
+    "log_prob_to_logit",
+    "MIN_LOG_PROB",
+]

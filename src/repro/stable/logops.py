@@ -1,0 +1,96 @@
+"""Numerically stable log-space primitives (paper §5).
+
+All CLAX probability computations run in log-space. The primitives here
+implement the paper's Eq. 15-18: products become sums, complements use the
+Mächler [2012] piecewise log1mexp, and logits map to log-probabilities via
+stable log-sigmoid (Eq. 17).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Default floor used when a model must assign "impossible" events a small
+# non-zero probability (e.g. clicks after the first click under the cascade
+# model, Appendix A.5). exp(-13.8) ~= 1e-6.
+MIN_LOG_PROB = -13.815510557964274
+
+
+def log1mexp(a: jax.Array) -> jax.Array:
+    """log(1 - exp(a)) for a <= 0, Mächler's piecewise form (paper Eq. 18).
+
+    Switches at -log(2): `log(-expm1(a))` is accurate for a close to 0,
+    `log1p(-exp(a))` for very negative a. Inputs are clipped to <= 0 so tiny
+    positive rounding noise does not produce NaNs.
+    """
+    a = jnp.minimum(a, 0.0)
+    log2 = jnp.log(2.0).astype(a.dtype)
+    # Guard both branches against generating NaNs inside jnp.where.
+    near_zero = a > -log2
+    # branch 1: a in (-log2, 0]: -expm1(a) in (0, ~0.693]
+    b1 = jnp.log(-jnp.expm1(jnp.where(near_zero, a, -log2)))
+    # branch 2: a <= -log2: exp(a) in (0, 0.5]
+    b2 = jnp.log1p(-jnp.exp(jnp.where(near_zero, -log2, a)))
+    return jnp.where(near_zero, b1, b2)
+
+
+def log_expm1(a: jax.Array) -> jax.Array:
+    """log(exp(a) - 1) for a > 0 (softplus inverse), stable for large a."""
+    # For large a: log(exp(a)-1) = a + log1p(-exp(-a)).
+    return a + log1mexp(-a)
+
+
+def log_sigmoid(x: jax.Array) -> jax.Array:
+    """log(sigmoid(x)) = -log_sum_exp([0, -x]) = -softplus(-x) (paper Eq. 17)."""
+    return -jax.nn.softplus(-x)
+
+
+def log1m_sigmoid(x: jax.Array) -> jax.Array:
+    """log(1 - sigmoid(x)) = log(sigmoid(-x)) = -softplus(x) (paper Eq. 17)."""
+    return -jax.nn.softplus(x)
+
+
+def logsumexp(a: jax.Array, axis=None, where=None, keepdims: bool = False) -> jax.Array:
+    """Max-shifted log-sum-exp (paper Eq. 16), mask-aware.
+
+    `where=False` entries contribute exp(-inf)=0 to the sum.
+    """
+    if where is not None:
+        a = jnp.where(where, a, -jnp.inf)
+    a_max = jnp.max(a, axis=axis, keepdims=True)
+    # If every entry is masked the max is -inf; shift by 0 instead to avoid
+    # (-inf) - (-inf) = nan. The result is then log(0) = -inf, as it should be.
+    shift = jnp.where(jnp.isfinite(a_max), a_max, 0.0)
+    out = jnp.log(jnp.sum(jnp.exp(a - shift), axis=axis, keepdims=True)) + shift
+    if not keepdims:
+        out = jnp.reshape(out, jnp.max(a, axis=axis).shape)
+    return out
+
+
+def log_not(log_p: jax.Array) -> jax.Array:
+    """log(1 - p) from log(p)."""
+    return log1mexp(log_p)
+
+
+def log_or(log_p: jax.Array, log_q: jax.Array) -> jax.Array:
+    """log(p + q - p*q) for independent events = log(1 - (1-p)(1-q))."""
+    return log1mexp(log1mexp(log_p) + log1mexp(log_q))
+
+
+def log_bce(log_p: jax.Array, clicks: jax.Array) -> jax.Array:
+    """Per-element negative log-likelihood of Bernoulli clicks, from log-probs.
+
+    nll = -[c * log(p) + (1-c) * log(1-p)], with log(1-p) via log1mexp.
+    """
+    clicks = clicks.astype(log_p.dtype)
+    return -(clicks * log_p + (1.0 - clicks) * log1mexp(log_p))
+
+
+def logit_to_log_prob(x: jax.Array) -> jax.Array:
+    """Alias of log_sigmoid: map a real logit to a log-probability."""
+    return log_sigmoid(x)
+
+
+def log_prob_to_logit(log_p: jax.Array) -> jax.Array:
+    """Inverse sigmoid in log-space: logit = log_p - log(1-p)."""
+    return log_p - log1mexp(log_p)

@@ -1,0 +1,12 @@
+"""Training runtime: Trainer, checkpointing, fault tolerance."""
+from repro.train.trainer import Trainer, TrainState
+from repro.train.checkpoints import CheckpointManager
+from repro.train.fault_tolerance import PreemptionHandler, drop_slowest_aggregate
+
+__all__ = [
+    "Trainer",
+    "TrainState",
+    "CheckpointManager",
+    "PreemptionHandler",
+    "drop_slowest_aggregate",
+]

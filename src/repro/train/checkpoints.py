@@ -1,0 +1,139 @@
+"""Atomic, keep-k, elastic-restore checkpointing for pytrees.
+
+Layout per step:  <dir>/step_<n>/
+    arrays.npz      — flat {path: array} of every leaf (host numpy)
+    structure.json  — treedef + dtypes + aux metadata (loader state, step, rng)
+A ``COMMIT`` marker file is written last; directories without it are treated
+as partial writes (e.g. a preemption mid-save) and ignored + garbage-collected.
+
+Elastic restore: arrays are saved unsharded (host-gathered). ``restore`` takes
+optional ``shardings`` (a pytree of NamedSharding) and device_puts each leaf
+accordingly — so a checkpoint written on an N-device mesh restores onto any
+M-device mesh whose axis sizes divide the array dims (re-sharding happens at
+device_put time). This is the standard reshard-on-restore elasticity model.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+COMMIT_MARKER = "COMMIT"
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out[key] = leaf
+    return out, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._gc_partial()
+
+    # -- public API ---------------------------------------------------------------
+    def save(self, step: int, tree: Any, aux: Optional[Dict] = None) -> str:
+        """Atomically write a checkpoint for ``step``."""
+        final_dir = self._step_dir(step)
+        tmp_dir = tempfile.mkdtemp(prefix=f".tmp_step_{step}_", dir=self.directory)
+        try:
+            arrays, structure = self._to_host(tree)
+            np.savez(os.path.join(tmp_dir, "arrays.npz"), **arrays)
+            with open(os.path.join(tmp_dir, "structure.json"), "w") as f:
+                json.dump({"step": step, "aux": aux or {}, "keys": structure}, f)
+            with open(os.path.join(tmp_dir, COMMIT_MARKER), "w") as f:
+                f.write("ok")
+            if os.path.exists(final_dir):
+                shutil.rmtree(final_dir)
+            os.rename(tmp_dir, final_dir)
+        except BaseException:
+            shutil.rmtree(tmp_dir, ignore_errors=True)
+            raise
+        self._gc_old()
+        return final_dir
+
+    def latest_step(self) -> Optional[int]:
+        steps = self._committed_steps()
+        return max(steps) if steps else None
+
+    def restore(self, step: Optional[int] = None, like: Any = None,
+                shardings: Any = None):
+        """Restore (tree, aux). ``like`` provides the pytree structure.
+
+        If ``shardings`` is given (pytree of NamedSharding matching ``like``),
+        every leaf is device_put with its sharding — elastic restore onto a
+        different mesh.
+        """
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoints in {self.directory}")
+        d = self._step_dir(step)
+        with open(os.path.join(d, "structure.json")) as f:
+            meta = json.load(f)
+        arrays = np.load(os.path.join(d, "arrays.npz"))
+        if like is None:
+            tree = {k: arrays[k] for k in arrays.files}
+        else:
+            flat, treedef = _flatten_with_paths(like)
+            leaves = []
+            for key in flat:
+                if key not in arrays:
+                    raise KeyError(f"checkpoint missing leaf {key!r}")
+                leaves.append(arrays[key])
+            # order must match tree_flatten order of `like`
+            paths_in_order = list(flat.keys())
+            restored = dict(zip(paths_in_order, leaves))
+            tree = jax.tree_util.tree_unflatten(
+                jax.tree_util.tree_structure(like),
+                [restored[k] for k in paths_in_order])
+        if shardings is not None:
+            tree = jax.tree_util.tree_map(
+                lambda x, s: jax.device_put(x, s), tree, shardings)
+        return tree, meta["aux"], meta["step"]
+
+    # -- internals -----------------------------------------------------------------
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.directory, f"step_{step:010d}")
+
+    def _committed_steps(self):
+        steps = []
+        for name in os.listdir(self.directory):
+            if name.startswith("step_") and os.path.exists(
+                    os.path.join(self.directory, name, COMMIT_MARKER)):
+                steps.append(int(name.split("_")[1]))
+        return steps
+
+    def _gc_partial(self):
+        for name in os.listdir(self.directory):
+            path = os.path.join(self.directory, name)
+            is_partial = (name.startswith(".tmp_") or
+                          (name.startswith("step_") and
+                           not os.path.exists(os.path.join(path, COMMIT_MARKER))))
+            if is_partial:
+                shutil.rmtree(path, ignore_errors=True)
+
+    def _gc_old(self):
+        steps = sorted(self._committed_steps())
+        for step in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(self._step_dir(step), ignore_errors=True)
+
+    @staticmethod
+    def _to_host(tree):
+        flat, _ = _flatten_with_paths(tree)
+        arrays = {}
+        for key, leaf in flat.items():
+            arr = np.asarray(jax.device_get(leaf))
+            arrays[key] = arr
+        return arrays, list(flat.keys())

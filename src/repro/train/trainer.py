@@ -1,0 +1,179 @@
+"""Trainer: the paper's Listing-1 entry point.
+
+    trainer = Trainer(optimizer=adamw(0.003), epochs=50)
+    history = trainer.train(model, train_loader, val_loader)
+    results = trainer.test(model, test_loader)
+
+Implements: jit'd update step (donated state), per-epoch validation with the
+paper's click metrics, early stopping after the first epoch without val-loss
+improvement (paper §6), periodic + preemption-triggered atomic checkpoints,
+and bit-exact resume (params + optimizer + loader state + epoch counter).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim as optim_lib
+from repro.core.metrics import (ConditionalPerplexity, LogLikelihood, MultiMetric,
+                                Perplexity)
+from repro.train.checkpoints import CheckpointManager
+from repro.train.fault_tolerance import PreemptionHandler
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    epoch: int = 0
+    global_step: int = 0
+
+
+def default_metrics() -> MultiMetric:
+    return MultiMetric({
+        "ll": LogLikelihood(),
+        "ppl": Perplexity(),
+        "cond_ppl": ConditionalPerplexity(),
+    })
+
+
+class Trainer:
+    def __init__(self, optimizer, epochs: int = 100, patience: int = 1,
+                 seed: int = 0, checkpoint_dir: Optional[str] = None,
+                 checkpoint_every_steps: Optional[int] = None,
+                 keep_checkpoints: int = 3,
+                 metrics_factory: Callable[[], MultiMetric] = default_metrics,
+                 log_fn: Callable[[str], None] = print,
+                 handle_preemption: bool = False):
+        self.optimizer = optimizer
+        self.epochs = epochs
+        self.patience = patience
+        self.seed = seed
+        self.metrics_factory = metrics_factory
+        self.log_fn = log_fn
+        self.checkpoint_every_steps = checkpoint_every_steps
+        self.ckpt = (CheckpointManager(checkpoint_dir, keep=keep_checkpoints)
+                     if checkpoint_dir else None)
+        self.handle_preemption = handle_preemption
+
+    # -- jit'd step --------------------------------------------------------------
+    def _make_step(self, model):
+        optimizer = self.optimizer
+
+        def step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(model.compute_loss)(params, batch)
+            updates, opt_state = optimizer.update(grads, opt_state, params)
+            params = optim_lib.apply_updates(params, updates)
+            return params, opt_state, loss
+
+        return jax.jit(step, donate_argnums=(0, 1))
+
+    def _make_eval_step(self, model, metrics):
+        def eval_step(params, state, batch):
+            log_probs = model.predict_clicks(params, batch)
+            cond = model.predict_conditional_clicks(params, batch)
+            return metrics.update(state, log_probs=log_probs,
+                                  conditional_log_probs=cond,
+                                  clicks=batch["clicks"], where=batch["mask"])
+
+        return jax.jit(eval_step)
+
+    # -- public API ----------------------------------------------------------------
+    def train(self, model, train_loader, val_loader=None,
+              state: Optional[TrainState] = None,
+              resume: bool = False) -> List[Dict[str, float]]:
+        if state is None:
+            params = model.init(jax.random.PRNGKey(self.seed))
+            state = TrainState(params=params, opt_state=self.optimizer.init(params))
+        if resume and self.ckpt and self.ckpt.latest_step() is not None:
+            tree = {"params": state.params, "opt_state": state.opt_state}
+            tree, aux, _ = self.ckpt.restore(like=tree)
+            state = TrainState(params=tree["params"], opt_state=tree["opt_state"],
+                               epoch=int(aux["epoch"]),
+                               global_step=int(aux["global_step"]))
+            train_loader.load_state_dict(aux["loader"])
+            self.log_fn(f"[trainer] resumed at epoch={state.epoch} "
+                        f"step={state.global_step}")
+
+        step_fn = self._make_step(model)
+        preempt = PreemptionHandler() if self.handle_preemption else None
+        history: List[Dict[str, float]] = []
+        best_val = float("inf")
+        bad_epochs = 0
+
+        while state.epoch < self.epochs:
+            t0 = time.time()
+            train_loss, n_batches = 0.0, 0
+            for batch in iter(train_loader):
+                batch = {k: jnp.asarray(v) for k, v in batch.items()}
+                state.params, state.opt_state, loss = step_fn(
+                    state.params, state.opt_state, batch)
+                train_loss += float(loss)
+                n_batches += 1
+                state.global_step += 1
+                if (self.ckpt and self.checkpoint_every_steps and
+                        state.global_step % self.checkpoint_every_steps == 0):
+                    self._save(state, train_loader)
+                if preempt and preempt.should_stop:
+                    self._save(state, train_loader)
+                    self.log_fn("[trainer] preempted; checkpoint written")
+                    return history
+            state.epoch += 1
+            record = {
+                "epoch": state.epoch,
+                "train_loss": train_loss / max(n_batches, 1),
+                "seconds": time.time() - t0,
+            }
+            if val_loader is not None:
+                val = self.evaluate(model, state.params, val_loader)
+                record.update({f"val_{k}": v for k, v in val.items()})
+                val_loss = -val["ll"]
+                if val_loss < best_val - 1e-6:
+                    best_val, bad_epochs = val_loss, 0
+                else:
+                    bad_epochs += 1
+            history.append(record)
+            self.log_fn(f"[trainer] {record}")
+            if self.ckpt:
+                self._save(state, train_loader)
+            if val_loader is not None and bad_epochs >= self.patience:
+                self.log_fn(f"[trainer] early stop at epoch {state.epoch}")
+                break
+        self._final_state = state
+        return history
+
+    def evaluate(self, model, params, loader, per_rank: bool = False):
+        metrics = self.metrics_factory()
+        eval_step = self._make_eval_step(model, metrics)
+        m_state = None
+        for batch in iter(loader):
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            if m_state is None:
+                m_state = metrics.init_state(batch["positions"].shape[1])
+            m_state = eval_step(params, m_state, batch)
+        if m_state is None:
+            raise ValueError(
+                "evaluation loader produced no batches — dataset smaller than "
+                "batch_size with drop_last=True? Pass drop_last=False.")
+        out = {k: float(v) for k, v in metrics.compute(m_state).items()}
+        if per_rank:
+            out["per_rank"] = {k: np.asarray(v).tolist()
+                               for k, v in metrics.compute_per_rank(m_state).items()}
+        return out
+
+    def test(self, model, test_loader, params=None, per_rank: bool = True):
+        if params is None:
+            params = self._final_state.params
+        return self.evaluate(model, params, test_loader, per_rank=per_rank)
+
+    # -- internals -------------------------------------------------------------------
+    def _save(self, state: TrainState, loader):
+        self.ckpt.save(state.global_step,
+                       {"params": state.params, "opt_state": state.opt_state},
+                       aux={"epoch": state.epoch, "global_step": state.global_step,
+                            "loader": loader.state_dict()})

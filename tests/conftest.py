@@ -1,0 +1,33 @@
+import os
+
+# Keep tests on a single CPU device (the dry-run sets 512 devices itself,
+# in its own process). Force deterministic, quiet execution.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import numpy as np
+import pytest
+
+jax.config.update("jax_default_matmul_precision", "highest")
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture()
+def small_log():
+    """A small synthetic PBM click log shared across tests."""
+    from repro.data import SyntheticConfig, generate_click_log
+
+    cfg = SyntheticConfig(n_sessions=512, n_queries=20, docs_per_query=12,
+                          positions=8, behavior="pbm", seed=7)
+    data, meta = generate_click_log(cfg)
+    return cfg, data, meta
+
+
+def jnp_batch(data, n=64, keys=("positions", "query_doc_ids", "clicks", "mask")):
+    import jax.numpy as jnp
+
+    return {k: jnp.asarray(v[:n]) for k, v in data.items() if k in keys}

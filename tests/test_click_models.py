@@ -1,0 +1,195 @@
+"""Click-model correctness: log-space recursions vs brute-force prob-space
+enumeration oracles, API invariants, and sampling consistency."""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    CascadeModel, ClickChainModel, DependentClickModel, DocumentCTR,
+    DynamicBayesianNetwork, GlobalCTR, PositionBasedModel, RankCTR,
+    SimplifiedDBN, UserBrowsingModel, MODEL_REGISTRY,
+)
+
+K = 5
+B = 4
+N_DOCS = 40
+
+
+def make_batch(seed=0, clicks=None):
+    rng = np.random.default_rng(seed)
+    batch = {
+        "positions": jnp.asarray(np.tile(np.arange(1, K + 1), (B, 1)), jnp.int32),
+        "query_doc_ids": jnp.asarray(rng.integers(0, N_DOCS, (B, K))),
+        "clicks": jnp.asarray(clicks if clicks is not None
+                              else rng.integers(0, 2, (B, K)).astype(np.float32)),
+        "mask": jnp.ones((B, K), bool),
+    }
+    return batch
+
+
+def all_models():
+    return {name: cls(query_doc_pairs=N_DOCS, positions=K)
+            for name, cls in MODEL_REGISTRY.items()}
+
+
+# ---------------------------------------------------------------------------
+# Brute-force oracle: enumerate all 2^K click sequences, score each with the
+# model's *conditional* probabilities, and marginalize. If the model's
+# unconditional prediction is consistent with its conditional recursion, the
+# two must agree (the PGM is Markov in its session state).
+# ---------------------------------------------------------------------------
+
+def brute_force_marginals(model, params, batch):
+    B_, K_ = batch["clicks"].shape
+    total = np.zeros((B_, K_))
+    norm = np.zeros((B_,))
+    for seq in itertools.product([0.0, 1.0], repeat=K_):
+        c = jnp.asarray(np.tile(np.asarray(seq, np.float32), (B_, 1)))
+        b = dict(batch, clicks=c)
+        cond_lp = np.asarray(model.predict_conditional_clicks(params, b),
+                             np.float64)
+        cond_p = np.exp(cond_lp)
+        seq_p = np.prod(np.where(np.asarray(seq) > 0, cond_p, 1 - cond_p), axis=1)
+        total += seq_p[:, None] * np.asarray(seq)[None, :]
+        norm += seq_p
+    return total, norm
+
+
+@pytest.mark.parametrize("name", ["pbm", "ubm", "dcm", "ccm", "dbn", "sdbn"])
+def test_unconditional_matches_brute_force(name):
+    model = MODEL_REGISTRY[name](query_doc_pairs=N_DOCS, positions=K)
+    params = model.init(jax.random.PRNGKey(3))
+    # randomize parameters so the test is not trivially symmetric
+    params = jax.tree_util.tree_map(
+        lambda x: x + 0.7 * jax.random.normal(jax.random.PRNGKey(11), x.shape),
+        params)
+    batch = make_batch(1)
+    marg, norm = brute_force_marginals(model, params, batch)
+    np.testing.assert_allclose(norm, 1.0, rtol=1e-5)  # proper distribution
+    pred = np.exp(np.asarray(model.predict_clicks(params, batch), np.float64))
+    np.testing.assert_allclose(pred, marg, rtol=2e-4, atol=1e-6)
+
+
+def test_cascade_brute_force_closed_form():
+    model = CascadeModel(query_doc_pairs=N_DOCS, positions=K)
+    params = model.init(jax.random.PRNGKey(5))
+    params = jax.tree_util.tree_map(
+        lambda x: x + 0.5 * jax.random.normal(jax.random.PRNGKey(6), x.shape), params)
+    batch = make_batch(2)
+    la = np.asarray(model.parts["attraction"](params["attraction"], batch), np.float64)
+    gamma = 1 / (1 + np.exp(-la))
+    want = gamma * np.cumprod(np.concatenate(
+        [np.ones((B, 1)), 1 - gamma[:, :-1]], axis=1), axis=1)
+    got = np.exp(np.asarray(model.predict_clicks(params, batch), np.float64))
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# API invariants
+# ---------------------------------------------------------------------------
+
+def test_all_log_probs_nonpositive_and_finite():
+    batch = make_batch(4)
+    for name, model in all_models().items():
+        params = model.init(jax.random.PRNGKey(1))
+        for fn in (model.predict_clicks, model.predict_conditional_clicks):
+            lp = np.asarray(fn(params, batch))
+            assert np.all(np.isfinite(lp) | (lp <= 0)), name
+            assert np.all(lp <= 1e-5), name
+        loss = model.compute_loss(params, batch)
+        assert np.isfinite(float(loss)), name
+
+
+def test_position_independent_models_cond_equals_uncond():
+    batch = make_batch(8)
+    for name in ("gctr", "rctr", "dctr", "pbm"):
+        model = MODEL_REGISTRY[name](query_doc_pairs=N_DOCS, positions=K)
+        params = model.init(jax.random.PRNGKey(2))
+        np.testing.assert_array_equal(
+            np.asarray(model.predict_clicks(params, batch)),
+            np.asarray(model.predict_conditional_clicks(params, batch)))
+
+
+def test_gradients_flow_to_all_parameters():
+    batch = make_batch(9)
+    for name, model in all_models().items():
+        params = model.init(jax.random.PRNGKey(1))
+        grads = jax.grad(model.compute_loss)(params, batch)
+        flat = jax.tree_util.tree_leaves_with_path(grads)
+        for path, g in flat:
+            assert np.all(np.isfinite(np.asarray(g))), (name, path)
+        total = sum(float(jnp.sum(jnp.abs(g))) for _, g in flat)
+        assert total > 0, name
+
+
+def test_cascade_conditional_floors_after_click():
+    model = CascadeModel(query_doc_pairs=N_DOCS, positions=K)
+    params = model.init(jax.random.PRNGKey(0))
+    clicks = np.zeros((B, K), np.float32)
+    clicks[:, 1] = 1.0  # click at rank 2
+    batch = make_batch(3, clicks=clicks)
+    lp = np.asarray(model.predict_conditional_clicks(params, batch))
+    from repro.stable import MIN_LOG_PROB
+    assert np.all(lp[:, 2:] == MIN_LOG_PROB)
+    assert np.all(lp[:, :2] > MIN_LOG_PROB)
+
+
+def test_sampling_matches_marginals_statistically():
+    """Monte-Carlo CTR per rank ~= unconditional click probability."""
+    for name in ("pbm", "dcm", "dbn", "cm", "ubm", "ccm"):
+        model = MODEL_REGISTRY[name](query_doc_pairs=N_DOCS, positions=K)
+        params = model.init(jax.random.PRNGKey(4))
+        params = jax.tree_util.tree_map(
+            lambda x: x + 0.5 * jax.random.normal(jax.random.PRNGKey(7), x.shape),
+            params)
+        rng = np.random.default_rng(0)
+        big_b = 4000
+        batch = {
+            "positions": jnp.asarray(np.tile(np.arange(1, K + 1), (big_b, 1)), jnp.int32),
+            "query_doc_ids": jnp.asarray(rng.integers(0, N_DOCS, (big_b, K))),
+            "clicks": jnp.zeros((big_b, K), jnp.float32),
+            "mask": jnp.ones((big_b, K), bool),
+        }
+        pred = np.exp(np.asarray(model.predict_clicks(params, batch), np.float64))
+        samples = model.sample(params, batch, jax.random.PRNGKey(123))
+        emp = np.asarray(samples["clicks"], np.float64)
+        np.testing.assert_allclose(emp.mean(axis=0), pred.mean(axis=0),
+                                   atol=0.03, err_msg=name)
+
+
+def test_right_padding_does_not_change_real_positions():
+    """Chain recursions must be unaffected by what sits in the padded tail."""
+    for name in ("dcm", "ccm", "dbn", "sdbn", "ubm", "cm", "pbm"):
+        model = MODEL_REGISTRY[name](query_doc_pairs=N_DOCS, positions=K)
+        params = model.init(jax.random.PRNGKey(1))
+        batch = make_batch(5)
+        mask = np.ones((B, K), bool)
+        mask[:, -2:] = False  # pad the last two ranks
+        b1 = dict(batch, mask=jnp.asarray(mask))
+        # scramble padded ids/clicks; real prefix must be untouched
+        ids2 = np.asarray(batch["query_doc_ids"]).copy()
+        ids2[:, -2:] = 0
+        clicks2 = np.asarray(batch["clicks"]).copy()
+        clicks2[:, -2:] = 0.0
+        b2 = dict(b1, query_doc_ids=jnp.asarray(ids2), clicks=jnp.asarray(clicks2))
+        for fn in ("predict_clicks",):
+            lp1 = np.asarray(getattr(model, fn)(params, b1))[:, :-2]
+            lp2 = np.asarray(getattr(model, fn)(params, b2))[:, :-2]
+            np.testing.assert_allclose(lp1, lp2, rtol=1e-6, err_msg=(name, fn))
+
+
+def test_loss_respects_mask():
+    model = PositionBasedModel(query_doc_pairs=N_DOCS, positions=K)
+    params = model.init(jax.random.PRNGKey(1))
+    batch = make_batch(6)
+    mask = np.ones((B, K), bool)
+    mask[:, -1] = False
+    clicks_mod = np.asarray(batch["clicks"]).copy()
+    b1 = dict(batch, mask=jnp.asarray(mask))
+    clicks_mod[:, -1] = 1 - clicks_mod[:, -1]  # flip masked click
+    b2 = dict(b1, clicks=jnp.asarray(clicks_mod))
+    assert float(model.compute_loss(params, b1)) == pytest.approx(
+        float(model.compute_loss(params, b2)), rel=1e-6)

@@ -1,0 +1,158 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.ops import dcn_cross, embedding_bag, fm_interaction, flash_attention
+
+RNG = np.random.default_rng(0)
+
+
+def randn(*shape, dtype=jnp.float32):
+    return jnp.asarray(RNG.normal(size=shape).astype(np.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# embedding_bag
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,L,N,D", [(4, 3, 32, 16), (8, 1, 64, 128),
+                                     (3, 7, 16, 200), (16, 5, 128, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_embedding_bag_sweep(B, L, N, D, dtype):
+    table = randn(N, D, dtype=dtype)
+    ids = jnp.asarray(RNG.integers(-1, N, (B, L)), jnp.int32)  # -1 = pad
+    w = randn(B, L)
+    got = embedding_bag(table, ids, w, impl="pallas")
+    want = ref.embedding_bag_ref(table, ids, w)
+    tol = 1e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+def test_embedding_bag_combiners():
+    table = randn(16, 8)
+    ids = jnp.asarray([[0, 1, -1], [2, -1, -1]], jnp.int32)
+    got_mean = embedding_bag(table, ids, combiner="mean", impl="pallas")
+    want0 = (np.asarray(table)[0] + np.asarray(table)[1]) / 2
+    np.testing.assert_allclose(np.asarray(got_mean)[0], want0, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(got_mean)[1], np.asarray(table)[2],
+                               rtol=1e-6)
+
+
+def test_embedding_bag_grads_match_ref():
+    table = randn(32, 16)
+    ids = jnp.asarray(RNG.integers(-1, 32, (6, 4)), jnp.int32)
+    w = randn(6, 4)
+
+    def loss_k(t, w_):
+        return jnp.sum(embedding_bag(t, ids, w_, impl="pallas") ** 2)
+
+    def loss_r(t, w_):
+        return jnp.sum(ref.embedding_bag_ref(t, ids, w_) ** 2)
+
+    gt_k, gw_k = jax.grad(loss_k, argnums=(0, 1))(table, w)
+    gt_r, gw_r = jax.grad(loss_r, argnums=(0, 1))(table, w)
+    np.testing.assert_allclose(np.asarray(gt_k), np.asarray(gt_r), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(gw_k), np.asarray(gw_r), rtol=1e-5)
+
+
+@given(st.integers(1, 12), st.integers(1, 6), st.integers(2, 40),
+       st.integers(1, 150))
+@settings(max_examples=12, deadline=None)
+def test_embedding_bag_property(B, L, N, D):
+    table = randn(N, D)
+    ids = jnp.asarray(RNG.integers(-1, N, (B, L)), jnp.int32)
+    w = randn(B, L)
+    got = embedding_bag(table, ids, w, impl="pallas")
+    want = ref.embedding_bag_ref(table, ids, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# fm_interaction
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,F,D", [(4, 39, 10), (130, 8, 16), (7, 3, 128),
+                                   (256, 39, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fm_interaction_sweep(B, F, D, dtype):
+    v = randn(B, F, D, dtype=dtype)
+    got = fm_interaction(v, impl="pallas")
+    want = ref.fm_interaction_ref(v)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+def test_fm_matches_explicit_pairwise():
+    """FM identity: 0.5[(Σv)² − Σv²] == Σ_{i<j} <v_i, v_j>."""
+    v = randn(3, 6, 4)
+    want = np.zeros(3, np.float32)
+    vn = np.asarray(v)
+    for i in range(6):
+        for j in range(i + 1, 6):
+            want += np.sum(vn[:, i] * vn[:, j], axis=-1)
+    got = fm_interaction(v, impl="pallas")
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# dcn_cross
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,D", [(8, 64), (300, 128), (5, 190), (64, 469)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dcn_cross_sweep(B, D, dtype):
+    x0, x = randn(B, D, dtype=dtype), randn(B, D, dtype=dtype)
+    w, b = randn(D, D, dtype=dtype), randn(D, dtype=dtype)
+    got = dcn_cross(x0, x, w, b, impl="pallas")
+    want = ref.dcn_cross_ref(x0, x, w, b)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,Hq,Hkv,Sq,Sk,Dh", [
+    (2, 4, 4, 128, 128, 64),    # MHA square
+    (1, 8, 2, 64, 256, 64),     # GQA cross-length
+    (2, 4, 1, 96, 160, 128),    # MQA, non-multiple seq (q padding path)
+    (1, 2, 2, 1, 512, 64),      # decode: one query vs long KV
+])
+@pytest.mark.parametrize("causal", [False, True])
+def test_flash_attention_sweep(B, Hq, Hkv, Sq, Sk, Dh, causal):
+    q = randn(B, Hq, Sq, Dh)
+    k = randn(B, Hkv, Sk, Dh)
+    v = randn(B, Hkv, Sk, Dh)
+    got = flash_attention(q, k, v, causal=causal, impl="pallas",
+                          block_q=64, block_k=64)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_bf16():
+    q = randn(1, 2, 64, 64, dtype=jnp.bfloat16)
+    k = randn(1, 2, 128, 64, dtype=jnp.bfloat16)
+    v = randn(1, 2, 128, 64, dtype=jnp.bfloat16)
+    got = flash_attention(q, k, v, causal=True, impl="pallas")
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=5e-2, atol=5e-2)
+
+
+def test_flash_attention_softmax_rows_sum_to_one():
+    """Degenerate check: with v = ones, output must be exactly ones."""
+    q = randn(1, 2, 64, 64)
+    k = randn(1, 2, 128, 64)
+    v = jnp.ones((1, 2, 128, 64), jnp.float32)
+    got = flash_attention(q, k, v, impl="pallas")
+    np.testing.assert_allclose(np.asarray(got), 1.0, rtol=1e-5)

@@ -1,0 +1,99 @@
+"""Property tests for the stable log-space primitives (paper §5)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.stable import (
+    log1mexp, log_sigmoid, log1m_sigmoid, logsumexp, log_bce, log_or,
+    log_prob_to_logit,
+)
+
+
+@given(st.floats(min_value=-50.0, max_value=-1e-6))
+@settings(max_examples=200, deadline=None)
+def test_log1mexp_matches_float64_reference(a):
+    got = float(log1mexp(jnp.float64(a) if jax.config.jax_enable_x64 else jnp.float32(a)))
+    want = np.log1p(-np.exp(np.float64(a)))
+    assert np.isfinite(got)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_log1mexp_extreme_ranges():
+    # p ~ 1 (a ~ 0-): no catastrophic cancellation
+    a = jnp.float32(-1e-7)
+    assert np.isfinite(float(log1mexp(a)))
+    # p ~ 0 (a very negative): no underflow to -inf
+    a = jnp.float32(-80.0)
+    np.testing.assert_allclose(float(log1mexp(a)), 0.0, atol=1e-6)
+    # exactly 0 input -> -inf is mathematically right
+    assert float(log1mexp(jnp.float32(0.0))) == -np.inf
+
+
+@given(st.floats(min_value=-80.0, max_value=80.0))
+@settings(max_examples=200, deadline=None)
+def test_log_sigmoid_bounds(x):
+    ls = float(log_sigmoid(jnp.float32(x)))
+    l1ms = float(log1m_sigmoid(jnp.float32(x)))
+    assert ls <= 0.0 and l1ms <= 0.0
+    # exp(ls) + exp(l1ms) == 1
+    np.testing.assert_allclose(np.exp(ls) + np.exp(l1ms), 1.0, rtol=1e-5)
+
+
+def test_log_sigmoid_no_overflow():
+    assert np.isfinite(float(log_sigmoid(jnp.float32(-1e4))) + 1e4)
+    np.testing.assert_allclose(float(log_sigmoid(jnp.float32(1e4))), 0.0, atol=1e-6)
+
+
+@given(st.lists(st.floats(min_value=-100, max_value=100), min_size=1, max_size=8))
+@settings(max_examples=200, deadline=None)
+def test_logsumexp_matches_numpy(xs):
+    a = jnp.asarray(xs, jnp.float32)
+    got = float(logsumexp(a))
+    want = np.log(np.sum(np.exp(np.float64(np.asarray(xs))))) if len(xs) else -np.inf
+    np.testing.assert_allclose(got, np.float32(want), rtol=1e-4, atol=1e-5)
+
+
+def test_logsumexp_mask():
+    a = jnp.asarray([0.0, 100.0, -3.0], jnp.float32)
+    where = jnp.asarray([True, False, True])
+    got = float(logsumexp(a, where=where))
+    want = np.log(np.exp(0.0) + np.exp(-3.0))
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_logsumexp_all_masked_is_neg_inf():
+    a = jnp.asarray([1.0, 2.0], jnp.float32)
+    got = float(logsumexp(a, where=jnp.asarray([False, False])))
+    assert got == -np.inf
+
+
+@given(st.floats(min_value=1e-6, max_value=1 - 1e-4), st.integers(0, 1))
+@settings(max_examples=200, deadline=None)
+def test_log_bce_matches_direct(p, c):
+    # rtol bounded by float32 rounding of log(p) near p ~ 1 in the test
+    # construction itself; log_bce is exact given its log-space input.
+    lp = jnp.log(jnp.float32(p))
+    got = float(log_bce(lp, jnp.float32(c)))
+    want = -(c * np.log(p) + (1 - c) * np.log1p(-p))
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=1e-5)
+
+
+def test_log_or():
+    p, q = 0.3, 0.2
+    got = float(log_or(jnp.log(jnp.float32(p)), jnp.log(jnp.float32(q))))
+    np.testing.assert_allclose(np.exp(got), p + q - p * q, rtol=1e-5)
+
+
+def test_log_prob_to_logit_roundtrip():
+    for p in [0.01, 0.5, 0.99]:
+        logit = float(log_prob_to_logit(jnp.log(jnp.float32(p))))
+        np.testing.assert_allclose(1 / (1 + np.exp(-logit)), p, rtol=1e-4)
+
+
+def test_gradients_are_finite_at_boundaries():
+    g = jax.grad(lambda x: log1mexp(x))(jnp.float32(-1e-6))
+    assert np.isfinite(float(g))
+    g = jax.grad(lambda x: log_sigmoid(x))(jnp.float32(-100.0))
+    assert np.isfinite(float(g))

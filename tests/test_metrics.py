@@ -1,0 +1,120 @@
+"""Click + ranking metric tests."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ConditionalPerplexity, LogLikelihood, MultiMetric,
+                        Perplexity, average_precision_metric, dcg_metric,
+                        mrr_metric, ndcg_metric)
+from repro.core.metrics import RaxMetric
+
+
+def _state_after(metric, log_probs, clicks, where=None, K=4):
+    state = metric.init_state(K)
+    kwargs = {"log_probs": log_probs, "conditional_log_probs": log_probs,
+              "clicks": clicks}
+    if where is not None:
+        kwargs["where"] = where
+    routed = {k: v for k, v in kwargs.items() if k in metric.requires}
+    return metric.update(state, **routed)
+
+
+def test_perplexity_perfect_and_random():
+    clicks = jnp.asarray([[1.0, 0.0, 1.0, 0.0]])
+    near_perfect = jnp.log(jnp.where(clicks > 0, 1 - 1e-7, 1e-7))
+    m = Perplexity()
+    np.testing.assert_allclose(
+        float(m.compute(_state_after(m, near_perfect, clicks))), 1.0,
+        atol=1e-4)
+    coin = jnp.full((1, 4), jnp.log(0.5))
+    np.testing.assert_allclose(
+        float(m.compute(_state_after(m, coin, clicks))), 2.0, rtol=1e-5)
+
+
+def test_per_rank_vs_global():
+    clicks = jnp.asarray([[1.0, 0.0]])
+    lp = jnp.log(jnp.asarray([[0.9, 0.4]]))
+    m = Perplexity()
+    state = _state_after(m, lp, clicks, K=2)
+    per_rank = np.asarray(m.compute_per_rank(state))
+    want0 = 2 ** (-np.log2(0.9))
+    want1 = 2 ** (-np.log2(0.6))
+    np.testing.assert_allclose(per_rank, [want0, want1], rtol=1e-5)
+
+
+def test_masking_excludes_padding():
+    clicks = jnp.asarray([[1.0, 1.0]])
+    lp = jnp.log(jnp.asarray([[0.9, 1e-9]]))  # horrid prediction at rank 2
+    where = jnp.asarray([[True, False]])
+    m = LogLikelihood()
+    got = float(m.compute(_state_after(m, lp, clicks, where=where, K=2)))
+    np.testing.assert_allclose(got, np.log(0.9), rtol=1e-5)
+
+
+def test_multimetric_routing_and_streaming():
+    mm = MultiMetric({"ll": LogLikelihood(), "ppl": Perplexity(),
+                      "cond": ConditionalPerplexity()})
+    state = mm.init_state(2)
+    clicks = jnp.asarray([[1.0, 0.0]])
+    lp = jnp.log(jnp.asarray([[0.8, 0.3]]))
+    # two updates must equal one update with both rows
+    state = mm.update(state, log_probs=lp, conditional_log_probs=lp,
+                      clicks=clicks, where=jnp.ones((1, 2), bool))
+    state = mm.update(state, log_probs=lp, conditional_log_probs=lp,
+                      clicks=clicks, where=jnp.ones((1, 2), bool))
+    once = mm.init_state(2)
+    both = jnp.concatenate([lp, lp])
+    once = mm.update(once, log_probs=both, conditional_log_probs=both,
+                     clicks=jnp.concatenate([clicks, clicks]),
+                     where=jnp.ones((2, 2), bool))
+    for key in ("ll", "ppl", "cond"):
+        np.testing.assert_allclose(float(mm.compute(state)[key]),
+                                   float(mm.compute(once)[key]), rtol=1e-6)
+
+
+def test_dcg_hand_computed():
+    scores = jnp.asarray([[0.9, 0.5, 0.1]])
+    labels = jnp.asarray([[0, 2, 1]])
+    # ranking by score: item0 (label 0), item1 (label 2), item2 (label 1)
+    want = 0.0 + (2**2 - 1) / np.log2(3) + (2**1 - 1) / np.log2(4)
+    np.testing.assert_allclose(float(dcg_metric(scores, labels)), want,
+                               rtol=1e-5)
+
+
+def test_ndcg_is_one_for_ideal_order():
+    scores = jnp.asarray([[3.0, 2.0, 1.0]])
+    labels = jnp.asarray([[2, 1, 0]])
+    np.testing.assert_allclose(float(ndcg_metric(scores, labels)), 1.0,
+                               rtol=1e-6)
+
+
+def test_mrr():
+    scores = jnp.asarray([[0.9, 0.8, 0.7]])
+    labels = jnp.asarray([[0, 0, 1]])
+    np.testing.assert_allclose(float(mrr_metric(scores, labels)), 1 / 3,
+                               rtol=1e-6)
+
+
+def test_average_precision():
+    scores = jnp.asarray([[0.9, 0.8, 0.7, 0.6]])
+    labels = jnp.asarray([[1, 0, 1, 0]])
+    want = (1 / 1 + 2 / 3) / 2
+    np.testing.assert_allclose(float(average_precision_metric(scores, labels)),
+                               want, rtol=1e-6)
+
+
+def test_ranking_metrics_respect_mask():
+    scores = jnp.asarray([[0.9, 0.8, 100.0]])
+    labels = jnp.asarray([[1, 0, 5]])
+    where = jnp.asarray([[True, True, False]])
+    got = float(mrr_metric(scores, labels, where=where))
+    np.testing.assert_allclose(got, 1.0, rtol=1e-6)  # masked item excluded
+
+
+def test_rax_metric_adapter():
+    m = RaxMetric(ndcg_metric, top_n=2)
+    state = m.init_state(3)
+    state = m.update(state, scores=jnp.asarray([[3.0, 2.0, 1.0]]),
+                     labels=jnp.asarray([[2, 1, 0]]),
+                     where=jnp.ones((1, 3), bool))
+    np.testing.assert_allclose(float(m.compute(state)), 1.0, rtol=1e-6)

@@ -1,0 +1,102 @@
+"""Mixture-model behaviour (paper §4.3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
+from repro.core import (DocumentCTR, DynamicBayesianNetwork, EmbeddingParameter,
+                        EmbeddingParameterConfig, GlobalCTR, MixtureModel,
+                        PositionBasedModel)
+
+N_DOCS, K, B = 60, 6, 32
+
+
+def _batch(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "positions": jnp.asarray(np.tile(np.arange(1, K + 1), (B, 1)), jnp.int32),
+        "query_doc_ids": jnp.asarray(rng.integers(0, N_DOCS, (B, K))),
+        "clicks": jnp.asarray(rng.integers(0, 2, (B, K)).astype(np.float32)),
+        "mask": jnp.ones((B, K), bool),
+    }
+
+
+def test_shared_parameters_accumulate_gradients():
+    attr = EmbeddingParameter(EmbeddingParameterConfig(parameters=N_DOCS))
+    pbm = PositionBasedModel(attraction=attr, positions=K)
+    dbn = DynamicBayesianNetwork(attraction=attr, positions=K,
+                                 query_doc_pairs=N_DOCS)
+    mix = MixtureModel([pbm, dbn])
+    params = mix.init(jax.random.PRNGKey(0))
+    # exactly one attraction table in the store
+    attraction_keys = [k for k in params["store"] if "attraction" in k]
+    assert len(attraction_keys) == 1
+    g = jax.grad(mix.compute_loss)(params, _batch())
+    # grads flow into the single shared copy and the prior
+    assert float(jnp.abs(g["store"][attraction_keys[0]]["table"]).sum()) > 0
+    assert float(jnp.abs(g["prior_logits"]).sum()) > 0
+
+
+def test_mixture_loss_never_worse_than_best_member_at_init():
+    """At uniform prior, -log sum_m pi_m exp(-L_m) <= min_m L_m + log M."""
+    pbm = PositionBasedModel(query_doc_pairs=N_DOCS, positions=K)
+    gctr = GlobalCTR(positions=K)
+    mix = MixtureModel([pbm, gctr])
+    params = mix.init(jax.random.PRNGKey(1))
+    batch = _batch(1)
+    mix_loss = float(mix.compute_loss(params, batch))
+    member_losses = [
+        float(pbm.compute_loss(mix._model_params(params, 0), batch)),
+        float(gctr.compute_loss(mix._model_params(params, 1), batch)),
+    ]
+    # per-item normalized mixture loss is bounded by the best member plus
+    # the prior penalty (log M spread over items)
+    n_items = B * K
+    assert mix_loss <= min(member_losses) + np.log(2) / 1 + 1e-6
+
+
+def test_prior_concentrates_on_generating_model():
+    """Data sampled from a PBM: mixture(PBM, GCTR) should upweight the PBM."""
+    from repro.data import SyntheticConfig, generate_click_log
+
+    cfg = SyntheticConfig(n_sessions=4000, n_queries=40, docs_per_query=12,
+                          positions=K, behavior="pbm", seed=5)
+    data, _ = generate_click_log(cfg)
+    pbm = PositionBasedModel(query_doc_pairs=cfg.n_query_doc_pairs,
+                             positions=K, init_prob=1 / 9)
+    gctr = GlobalCTR(positions=K, init_prob=1 / 9)
+    mix = MixtureModel([pbm, gctr], temperature=1.0)
+    tx = optim.adamw(0.05)
+    params = mix.init(jax.random.PRNGKey(0))
+    opt = tx.init(params)
+
+    @jax.jit
+    def step(params, opt, batch):
+        loss, g = jax.value_and_grad(mix.compute_loss)(params, batch)
+        updates, opt = tx.update(g, opt, params)
+        return optim.apply_updates(params, updates), opt, loss
+
+    n = data["positions"].shape[0]
+    for epoch in range(4):
+        order = np.random.default_rng(epoch).permutation(n)
+        for i in range(n // 512):
+            idx = order[i * 512:(i + 1) * 512]
+            batch = {k: jnp.asarray(v[idx]) for k, v in data.items()
+                     if k in ("positions", "query_doc_ids", "clicks", "mask")}
+            params, opt, _ = step(params, opt, batch)
+    prior = np.asarray(jax.nn.softmax(params["prior_logits"]))
+    assert prior[0] > 0.6, prior  # PBM favored
+
+
+def test_mixture_predictions_are_valid_log_probs():
+    pbm = PositionBasedModel(query_doc_pairs=N_DOCS, positions=K)
+    dctr = DocumentCTR(query_doc_pairs=N_DOCS, positions=K)
+    mix = MixtureModel([pbm, dctr])
+    params = mix.init(jax.random.PRNGKey(2))
+    batch = _batch(2)
+    for fn in (mix.predict_clicks, mix.predict_conditional_clicks):
+        lp = np.asarray(fn(params, batch))
+        assert np.all(np.isfinite(lp)) and np.all(lp <= 1e-6)
+    s = mix.sample(params, batch, jax.random.PRNGKey(3))
+    assert s["clicks"].shape == (B, K)
+    assert s["model_choice"].shape == (B,)

@@ -1,0 +1,201 @@
+"""Parameterization tests: hashing, QR, baseline correction, feature towers,
+EM baselines, sparse-row optimizer, recovery properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Compression, DeepCrossParameterConfig,
+                        EmbeddingParameter, EmbeddingParameterConfig,
+                        LinearParameterConfig, MLPParameterConfig,
+                        PositionBasedModel, build_parameter, em)
+from repro.core.parameterization import hash_ids
+from repro.optim.sparse import (init_sparse_table_state, sparse_adamw_update,
+                                sparse_row_grads)
+
+
+def test_hash_ids_deterministic_and_in_range():
+    ids = jnp.arange(1000)
+    h1, h2 = hash_ids(ids, 128), hash_ids(ids, 128)
+    np.testing.assert_array_equal(np.asarray(h1), np.asarray(h2))
+    assert int(h1.min()) >= 0 and int(h1.max()) < 128
+
+
+def test_hash_distribution_roughly_uniform():
+    h = np.asarray(hash_ids(jnp.arange(100_000), 64))
+    counts = np.bincount(h, minlength=64)
+    assert counts.min() > 100_000 / 64 * 0.8
+    assert counts.max() < 100_000 / 64 * 1.2
+
+
+def test_hash_compression_reduces_rows():
+    cfg = EmbeddingParameterConfig(parameters=1_000_000,
+                                   compression=Compression.HASH,
+                                   compression_ratio=100.0)
+    mod = EmbeddingParameter(cfg)
+    params = mod.init(jax.random.PRNGKey(0))
+    assert params["table"].shape[0] <= 1_000_000 / 50  # rounded to 512
+    batch = {"query_doc_ids": jnp.asarray([[0, 999_999]])}
+    out = mod(params, batch)
+    assert out.shape == (1, 2)
+
+
+def test_qr_distinct_ids_mostly_distinct_embeddings():
+    cfg = EmbeddingParameterConfig(parameters=100_000,
+                                   compression=Compression.QR,
+                                   compression_ratio=10.0, features=4)
+    mod = EmbeddingParameter(cfg)
+    params = mod.init(jax.random.PRNGKey(0))
+    params = jax.tree_util.tree_map(
+        lambda x: jax.random.normal(jax.random.PRNGKey(1), x.shape), params)
+    ids = jnp.arange(2000)[None]
+    out = np.asarray(mod(params, {"query_doc_ids": ids}))[0]
+    uniq = len(np.unique(out.round(5), axis=0))
+    assert uniq > 1900  # QR: collisions ~ |ids|/(q*r), essentially none here
+
+
+def test_baseline_correction_gradient_flows_to_baseline():
+    cfg = EmbeddingParameterConfig(parameters=100, baseline_correction=True,
+                                   init_logit=-1.5)
+    mod = EmbeddingParameter(cfg)
+    params = mod.init(jax.random.PRNGKey(0))
+    np.testing.assert_array_equal(np.asarray(params["table"]), 0.0)
+    np.testing.assert_allclose(np.asarray(params["baseline"]), -1.5)
+    batch = {"query_doc_ids": jnp.asarray([[1, 2, 3]])}
+
+    def loss(p):
+        return jnp.sum(mod(p, batch) ** 2)
+
+    g = jax.grad(loss)(params)
+    assert float(jnp.abs(g["baseline"]).sum()) > 0
+
+
+@pytest.mark.parametrize("config", [
+    LinearParameterConfig(features=8),
+    MLPParameterConfig(features=8, hidden=(16,)),
+    DeepCrossParameterConfig(features=8, cross_layers=2, deep_layers=1),
+])
+def test_feature_towers_shape(config):
+    mod = build_parameter(config)
+    params = mod.init(jax.random.PRNGKey(0))
+    batch = {"query_doc_features": jnp.ones((3, 5, 8))}
+    out = mod(params, batch)
+    assert out.shape == (3, 5)
+
+
+# ---------------------------------------------------------------------------
+# EM correctness properties
+# ---------------------------------------------------------------------------
+
+def _pbm_loglik(theta, gamma, pos, docs, clicks, mask):
+    p = np.clip(theta[pos] * gamma[docs], 1e-9, 1 - 1e-9)
+    ll = clicks * np.log(p) + (1 - clicks) * np.log(1 - p)
+    return float((ll * mask).sum())
+
+
+def test_pbm_em_monotonically_improves_loglik(small_log):
+    cfg, data, meta = small_log
+    batch = {k: jnp.asarray(v) for k, v in data.items()
+             if k in ("positions", "query_doc_ids", "clicks", "mask")}
+    pos = np.asarray(batch["positions"]).reshape(-1) - 1
+    docs = np.asarray(batch["query_doc_ids"]).reshape(-1)
+    clicks = np.asarray(batch["clicks"]).reshape(-1)
+    mask = np.asarray(batch["mask"]).reshape(-1)
+    lls = []
+    for iters in (1, 3, 10, 30):
+        theta, gamma = em.fit_pbm_em(batch, cfg.positions,
+                                     cfg.n_query_doc_pairs, n_iters=iters)
+        lls.append(_pbm_loglik(np.asarray(theta), np.asarray(gamma),
+                               pos, docs, clicks, mask))
+    assert all(b >= a - 1e-6 for a, b in zip(lls, lls[1:])), lls
+
+
+def test_mle_counting_matches_numpy(small_log):
+    cfg, data, meta = small_log
+    batch = {k: jnp.asarray(v) for k, v in data.items()
+             if k in ("positions", "query_doc_ids", "clicks", "mask")}
+    np.testing.assert_allclose(float(em.fit_gctr(batch)),
+                               data["clicks"].mean(), rtol=1e-6)
+    rctr = np.asarray(em.fit_rctr(batch, cfg.positions))
+    np.testing.assert_allclose(rctr, data["clicks"].mean(axis=0), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Sparse-row optimizer == dense AdamW on touched rows
+# ---------------------------------------------------------------------------
+
+def test_sparse_adamw_matches_dense_on_touched_rows():
+    from repro import optim
+
+    R, D = 64, 4
+    rng = np.random.default_rng(0)
+    table = jnp.asarray(rng.normal(size=(R, D)).astype(np.float32))
+    ids = jnp.asarray([[1, 5, 5], [9, 1, 2]], jnp.int32)
+    row_grads = jnp.asarray(rng.normal(size=(2, 3, D)).astype(np.float32))
+
+    # dense reference: scatter-add grads then dense adamw
+    dense_g = np.zeros((R, D), np.float32)
+    for b in range(2):
+        for k in range(3):
+            dense_g[int(ids[b, k])] += np.asarray(row_grads[b, k])
+    tx = optim.adamw(0.01, weight_decay=0.0)
+    state = tx.init(table)
+    updates, _ = tx.update(jnp.asarray(dense_g), state, table)
+    dense_next = optim.apply_updates(table, updates)
+
+    sstate = init_sparse_table_state(table)
+    uids, ugrads = sparse_row_grads(row_grads, ids, R)
+    sparse_next, _ = sparse_adamw_update(table, sstate, uids, ugrads, lr=0.01)
+
+    touched = sorted({int(i) for i in np.asarray(ids).reshape(-1)})
+    np.testing.assert_allclose(np.asarray(sparse_next)[touched],
+                               np.asarray(dense_next)[touched], rtol=1e-5)
+    untouched = [r for r in range(R) if r not in touched]
+    np.testing.assert_array_equal(np.asarray(sparse_next)[untouched],
+                                  np.asarray(table)[untouched])
+
+
+# ---------------------------------------------------------------------------
+# End-to-end recovery: training on a model's own samples recovers the fit
+# ---------------------------------------------------------------------------
+
+def test_pbm_gradient_training_matches_em_fit(small_log):
+    from benchmarks.common import evaluate_clicks, train_gradient
+
+    cfg, data, meta = small_log
+    full = {k: jnp.asarray(v) for k, v in data.items()
+            if k in ("positions", "query_doc_ids", "clicks", "mask")}
+    theta, gamma = em.fit_pbm_em(full, cfg.positions, cfg.n_query_doc_pairs,
+                                 n_iters=40, init=1 / 9)
+    pbm = PositionBasedModel(query_doc_pairs=cfg.n_query_doc_pairs,
+                             positions=cfg.positions)
+    em_m = evaluate_clicks(pbm, em.pbm_params_from_em(theta, gamma), data,
+                           positions=cfg.positions, batch_size=256)
+    model = PositionBasedModel(query_doc_pairs=cfg.n_query_doc_pairs,
+                               positions=cfg.positions, init_prob=1 / 9)
+    params, _ = train_gradient(model, data, None, epochs=20, batch_size=128,
+                               lr=0.05)
+    grad_m = evaluate_clicks(model, params, data, positions=cfg.positions,
+                             batch_size=256)
+    assert abs(grad_m["ppl"] - em_m["ppl"]) < 0.02  # the paper's Fig-1 claim
+
+
+def test_sdbn_mle_counting(small_log):
+    """SDBN MLE on SDBN-like data: gamma estimates correlate with truth."""
+    import jax.numpy as jnp
+
+    from repro.data import SyntheticConfig, generate_click_log
+
+    cfg = SyntheticConfig(n_sessions=20_000, n_queries=20, docs_per_query=10,
+                          positions=8, behavior="dbn", continuation=1.0,
+                          seed=13)  # lambda=1 == SDBN behavior
+    data, meta = generate_click_log(cfg)
+    batch = {k: jnp.asarray(v) for k, v in data.items()
+             if k in ("positions", "query_doc_ids", "clicks", "mask")}
+    gamma, sigma = em.fit_sdbn_mle(batch, cfg.n_query_doc_pairs)
+    g, t = np.asarray(gamma), meta["gamma"]
+    seen = g > 0
+    assert seen.sum() > 50
+    corr = np.corrcoef(g[seen], t[seen])[0, 1]
+    assert corr > 0.8, corr

@@ -1,0 +1,123 @@
+"""nn + optim substrate tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import nn, optim
+
+
+def test_dense_shapes_and_init_determinism():
+    layer = nn.Dense(8, 16)
+    p1 = layer.init(jax.random.PRNGKey(0))
+    p2 = layer.init(jax.random.PRNGKey(0))
+    np.testing.assert_array_equal(np.asarray(p1["kernel"]), np.asarray(p2["kernel"]))
+    y = layer(p1, jnp.ones((4, 8)))
+    assert y.shape == (4, 16)
+
+
+def test_mlp_depth_and_activation():
+    mlp = nn.MLP(4, [8, 8], 2, activation="relu")
+    p = mlp.init(jax.random.PRNGKey(1))
+    assert len(p) == 3
+    y = mlp(p, jnp.ones((5, 4)))
+    assert y.shape == (5, 2)
+
+
+def test_deepcross_cross_layer_identity():
+    """With zero cross/deep weights, stacked DCN passes x0 through head."""
+    dcn = nn.DeepCrossV2(6, cross_layers=2, deep_layers=0, out_features=1)
+    p = dcn.init(jax.random.PRNGKey(2))
+    x = jax.random.normal(jax.random.PRNGKey(3), (7, 6))
+    # zero the cross kernels -> crossed == x (x0 * (0 + 0) + x)
+    p0 = jax.tree_util.tree_map(jnp.zeros_like, p)
+    p0["head"] = p["head"]
+    got = dcn(p0, x)
+    want = x @ p["head"]["kernel"] + p["head"]["bias"]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+def test_rmsnorm_layer_norm_stats():
+    ln = nn.LayerNorm(16)
+    p = ln.init(jax.random.PRNGKey(0))
+    y = ln(p, jax.random.normal(jax.random.PRNGKey(1), (3, 16)) * 5 + 2)
+    np.testing.assert_allclose(np.asarray(jnp.mean(y, -1)), 0.0, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(jnp.std(y, -1)), 1.0, atol=1e-2)
+    rn = nn.RMSNorm(16)
+    pr = rn.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(2), (3, 16))
+    y = rn(pr, x)
+    ms = jnp.mean(jnp.square(y), -1)
+    np.testing.assert_allclose(np.asarray(ms), 1.0, atol=1e-2)
+
+
+def test_adamw_first_step_magnitude():
+    """First AdamW update ~= lr * sign(grad) (bias-corrected)."""
+    tx = optim.adamw(0.1, weight_decay=0.0)
+    params = {"w": jnp.asarray([1.0, -2.0])}
+    state = tx.init(params)
+    grads = {"w": jnp.asarray([0.3, -0.7])}
+    updates, _ = tx.update(grads, state, params)
+    np.testing.assert_allclose(np.asarray(updates["w"]),
+                               [-0.1, 0.1], rtol=1e-4)
+
+
+def test_adamw_decoupled_weight_decay():
+    tx = optim.adamw(0.1, weight_decay=0.5)
+    params = {"w": jnp.asarray([2.0])}
+    state = tx.init(params)
+    updates, _ = tx.update({"w": jnp.asarray([0.0])}, state, params)
+    # zero grad -> update = -lr * wd * w = -0.1*0.5*2
+    np.testing.assert_allclose(np.asarray(updates["w"]), [-0.1], rtol=1e-4)
+
+
+@pytest.mark.parametrize("factory", [
+    lambda: optim.sgd(0.1, momentum=0.9),
+    lambda: optim.adam(0.05),
+    lambda: optim.adagrad(0.5),
+    lambda: optim.adamw(0.05),
+])
+def test_optimizers_converge_on_quadratic(factory):
+    tx = factory()
+    x = jnp.asarray([3.0, -4.0])
+    state = tx.init(x)
+    for _ in range(300):
+        g = 2 * x
+        updates, state = tx.update(g, state, x)
+        x = optim.apply_updates(x, updates)
+    assert float(jnp.linalg.norm(x)) < 0.05
+
+
+def test_clip_by_global_norm():
+    tx = optim.chain(optim.clip_by_global_norm(1.0), optim.scale(-1.0))
+    g = {"a": jnp.asarray([3.0, 4.0])}
+    u, _ = tx.update(g, tx.init(g), None)
+    np.testing.assert_allclose(float(jnp.linalg.norm(-u["a"])), 1.0, rtol=1e-5)
+
+
+def test_gradient_accumulation_equals_big_batch():
+    """k accumulated microbatches == one big batch step (same update)."""
+    inner = optim.sgd(0.1)
+    acc = optim.accumulate_gradients(inner, every=4)
+    w_acc = jnp.asarray([1.0])
+    state = acc.init(w_acc)
+    micro_grads = [jnp.asarray([g]) for g in (1.0, 2.0, 3.0, 4.0)]
+    for g in micro_grads:
+        updates, state = acc.update(g, state, w_acc)
+        w_acc = optim.apply_updates(w_acc, updates)
+    w_big = optim.apply_updates(
+        jnp.asarray([1.0]),
+        inner.update(jnp.asarray([2.5]), inner.init(jnp.asarray([1.0])), None)[0])
+    np.testing.assert_allclose(np.asarray(w_acc), np.asarray(w_big), rtol=1e-6)
+
+
+def test_schedules():
+    from repro.optim import warmup_cosine, cosine_decay, linear_decay
+    s = warmup_cosine(1.0, warmup_steps=10, decay_steps=110)
+    assert float(s(jnp.asarray(0))) == 0.0
+    np.testing.assert_allclose(float(s(jnp.asarray(10))), 1.0, rtol=1e-5)
+    assert float(s(jnp.asarray(110))) < 1e-6
+    np.testing.assert_allclose(float(cosine_decay(2.0, 100)(jnp.asarray(0))),
+                               2.0)
+    np.testing.assert_allclose(
+        float(linear_decay(1.0, 0.0, 100)(jnp.asarray(50))), 0.5)

@@ -1,0 +1,134 @@
+"""Trainer / checkpoint / fault-tolerance behaviour tests."""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.core import PositionBasedModel
+from repro.data import ClickLogLoader, SyntheticConfig, generate_click_log, split_sessions
+from repro.train import CheckpointManager, Trainer, drop_slowest_aggregate
+
+
+@pytest.fixture()
+def log_and_loaders():
+    cfg = SyntheticConfig(n_sessions=3000, n_queries=30, docs_per_query=12,
+                          positions=8, behavior="pbm", seed=11)
+    data, meta = generate_click_log(cfg)
+    train, val, test = split_sessions(data, (0.7, 0.15, 0.15), seed=0)
+    mk = lambda d: ClickLogLoader(d, batch_size=256, seed=5)
+    return cfg, mk(train), mk(val), mk(test)
+
+
+def test_trainer_reduces_loss_and_early_stops(log_and_loaders):
+    cfg, train_loader, val_loader, test_loader = log_and_loaders
+    model = PositionBasedModel(query_doc_pairs=cfg.n_query_doc_pairs,
+                               positions=cfg.positions, init_prob=0.2)
+    trainer = Trainer(optim.adamw(0.05), epochs=30, patience=2,
+                      log_fn=lambda *_: None)
+    history = trainer.train(model, train_loader, val_loader)
+    assert history[-1]["train_loss"] < history[0]["train_loss"]
+    assert len(history) < 30  # early stopping fired
+    results = trainer.test(model, test_loader)
+    assert 1.0 < results["ppl"] < 2.0
+    assert "per_rank" in results and len(results["per_rank"]["ppl"]) == cfg.positions
+
+
+def test_checkpoint_roundtrip_and_keep_k(tmp_path):
+    ckpt = CheckpointManager(str(tmp_path), keep=2)
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.int32)}}
+    for step in (1, 2, 3):
+        ckpt.save(step, tree, aux={"epoch": step, "global_step": step,
+                                   "loader": {"epoch": 0, "step": step}})
+    assert ckpt.latest_step() == 3
+    # keep=2 garbage-collects step 1
+    restored, aux, step = ckpt.restore(like=tree)
+    assert step == 3 and aux["epoch"] == 3
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.asarray(tree["a"]))
+    with pytest.raises(Exception):
+        ckpt.restore(step=1, like=tree)
+
+
+def test_partial_checkpoint_is_ignored(tmp_path):
+    ckpt = CheckpointManager(str(tmp_path), keep=3)
+    ckpt.save(5, {"x": jnp.zeros(3)})
+    # simulate a crash mid-save: directory without COMMIT marker
+    bad = tmp_path / "step_0000000009"
+    bad.mkdir()
+    (bad / "arrays.npz").write_bytes(b"garbage")
+    ckpt2 = CheckpointManager(str(tmp_path), keep=3)
+    assert ckpt2.latest_step() == 5
+
+
+def test_resume_is_bit_exact(tmp_path, log_and_loaders):
+    cfg, train_loader, val_loader, _ = log_and_loaders
+    model = PositionBasedModel(query_doc_pairs=cfg.n_query_doc_pairs,
+                               positions=cfg.positions)
+
+    def run(epochs, ckpt_dir, resume=False, loader_seed=5):
+        # fresh loader each run so state starts clean
+        loader = ClickLogLoader(train_loader.data, batch_size=256, seed=loader_seed)
+        trainer = Trainer(optim.adamw(0.01), epochs=epochs, patience=100,
+                          checkpoint_dir=ckpt_dir, log_fn=lambda *_: None)
+        trainer.train(model, loader, val_loader=None, resume=resume)
+        return trainer._final_state.params
+
+    # uninterrupted 4 epochs
+    p_full = run(4, str(tmp_path / "full"))
+    # interrupted: 2 epochs, then resume to 4
+    run(2, str(tmp_path / "resume"))
+    p_resumed = run(4, str(tmp_path / "resume"), resume=True)
+
+    for (ka, a), (kb, b) in zip(
+            jax.tree_util.tree_leaves_with_path(p_full),
+            jax.tree_util.tree_leaves_with_path(p_resumed)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=str(ka))
+
+
+def test_drop_slowest_aggregate():
+    g1 = {"w": jnp.ones(3)}
+    g2 = {"w": 3 * jnp.ones(3)}
+    g3 = {"w": 5 * jnp.ones(3)}
+    out = drop_slowest_aggregate([g1, g2, g3], arrived=[True, True, False])
+    np.testing.assert_allclose(np.asarray(out["w"]), 2.0)
+    with pytest.raises(RuntimeError):
+        drop_slowest_aggregate([g1], arrived=[False])
+
+
+def test_loader_resume_mid_epoch():
+    data = {"positions": np.tile(np.arange(1, 5, dtype=np.int32), (100, 1)),
+            "query_doc_ids": np.arange(400, dtype=np.int64).reshape(100, 4),
+            "clicks": np.zeros((100, 4), np.float32),
+            "mask": np.ones((100, 4), bool)}
+    l1 = ClickLogLoader(data, batch_size=10, seed=3)
+    seen_first = [b["query_doc_ids"][0, 0] for b in iter(l1)]
+    # replay: consume 4 batches, checkpoint, restore into a new loader
+    l2 = ClickLogLoader(data, batch_size=10, seed=3)
+    it = iter(l2)
+    for _ in range(4):
+        next(it)
+    state = l2.state_dict()
+    l3 = ClickLogLoader(data, batch_size=10, seed=3)
+    l3.load_state_dict(state)
+    rest = [b["query_doc_ids"][0, 0] for b in iter(l3)]
+    assert rest == seen_first[4:]
+
+
+def test_loader_host_sharding_disjoint():
+    data = {"positions": np.tile(np.arange(1, 3, dtype=np.int32), (64, 1)),
+            "query_doc_ids": np.arange(128, dtype=np.int64).reshape(64, 2),
+            "clicks": np.zeros((64, 2), np.float32),
+            "mask": np.ones((64, 2), bool)}
+    shards = [ClickLogLoader(data, batch_size=8, shuffle=False,
+                             host_id=i, host_count=4) for i in range(4)]
+    ids = [set(l.data["query_doc_ids"].reshape(-1).tolist()) for l in shards]
+    for i in range(4):
+        for j in range(i + 1, 4):
+            assert not (ids[i] & ids[j])
+    assert len(set().union(*ids)) == 128
