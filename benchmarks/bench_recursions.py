@@ -1,0 +1,154 @@
+"""Scan vs vectorized vs Pallas walltime for the click-model hot paths.
+
+Compares, per chain model (DCM/CCM/DBN/SDBN) and UBM:
+  * predict_clicks / predict_conditional_clicks — lax.scan (the seed
+    implementation, kept as ``*_scan`` oracles) vs the vectorized recursion
+    engine (repro.core.recursions).
+  * compute_loss for a CTR-family model — log-space jnp composition vs the
+    fused session_nll kernel ("ref" and, where available, "pallas").
+
+Writes BENCH_recursions.json next to this file (or --out) so the perf
+trajectory of the recursion engine is recorded per PR.
+
+Run: PYTHONPATH=src python benchmarks/bench_recursions.py [--batch 4096]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Allow running without PYTHONPATH=src.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import MODEL_REGISTRY  # noqa: E402
+from repro.core.base import masked_mean  # noqa: E402
+from repro.kernels import session_nll  # noqa: E402
+from repro.stable import log_bce, log_sigmoid  # noqa: E402
+
+CHAIN_MODELS = ("dcm", "ccm", "dbn", "sdbn")
+
+
+def timed_pair(fn_a, fn_b, *args, warmup=2, iters=20, reps=5):
+    """Best-of walltime for two fns with interleaved sampling.
+
+    Alternating short bursts means both paths see the same machine-load eras,
+    so the ratio is robust to scheduler noise on a shared CPU even when the
+    absolute numbers wobble.
+    """
+    for _ in range(warmup):
+        out_a = jax.block_until_ready(fn_a(*args))
+        out_b = jax.block_until_ready(fn_b(*args))
+    best_a = best_b = float("inf")
+    for _ in range(reps):
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            out_a = jax.block_until_ready(fn_a(*args))
+            best_a = min(best_a, time.perf_counter() - t0)
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            out_b = jax.block_until_ready(fn_b(*args))
+            best_b = min(best_b, time.perf_counter() - t0)
+    return out_a, out_b, best_a, best_b
+
+
+def make_batch(b, k, n_docs, seed=0):
+    rng = np.random.default_rng(seed)
+    n_real = rng.integers(max(1, k // 2), k + 1, size=b)
+    return {
+        "positions": jnp.asarray(np.tile(np.arange(1, k + 1), (b, 1)), jnp.int32),
+        "query_doc_ids": jnp.asarray(rng.integers(0, n_docs, (b, k))),
+        "clicks": jnp.asarray((rng.random((b, k)) < 0.3).astype(np.float32)),
+        "mask": jnp.asarray(np.arange(k)[None, :] < n_real[:, None]),
+    }
+
+
+def bench_model(name, batch, n_docs, k, iters):
+    model = MODEL_REGISTRY[name](query_doc_pairs=n_docs, positions=k)
+    params = model.init(jax.random.PRNGKey(0))
+    out = {}
+    pairs = [("predict_clicks", model.predict_clicks,
+              getattr(model, "predict_clicks_scan",
+                      getattr(model, "predict_clicks_loop", None))),
+             ("predict_conditional_clicks", model.predict_conditional_clicks,
+              getattr(model, "predict_conditional_clicks_scan", None))]
+    for label, vec_fn, scan_fn in pairs:
+        if scan_fn is None:
+            continue
+        got, want, t_vec, t_scan = timed_pair(
+            jax.jit(vec_fn), jax.jit(scan_fn), params, batch, iters=iters)
+        err = float(jnp.max(jnp.abs(got - want)))
+        # The CI smoke job relies on this agreement check: init-scale params
+        # sit far inside the engines' exact domain, so any divergence at
+        # benchmark batch sizes is a real regression, not saturation.
+        assert err < 1e-4, f"{name}.{label}: vectorized != scan (err {err})"
+        out[label] = {"scan_ms": t_scan * 1e3, "vectorized_ms": t_vec * 1e3,
+                      "speedup": t_scan / t_vec, "max_abs_err": err}
+    return out
+
+
+def bench_session_nll(batch, iters):
+    rng = np.random.default_rng(7)
+    b, k = batch["clicks"].shape
+    logits = jnp.asarray(rng.normal(size=(b, k)).astype(np.float32) * 3)
+
+    def composed(x):
+        return masked_mean(log_bce(log_sigmoid(x), batch["clicks"]),
+                           batch["mask"])
+
+    out = {}
+    fused_ref = jax.jit(lambda x: session_nll(x, batch["clicks"],
+                                              batch["mask"], impl="ref"))
+    _, _, t_compose, t_ref = timed_pair(jax.jit(composed), fused_ref, logits,
+                                        iters=iters)
+    out["logspace_compose_ms"] = t_compose * 1e3
+    out["ref_ms"] = t_ref * 1e3
+    try:
+        fused_pl = jax.jit(lambda x: session_nll(x, batch["clicks"],
+                                                 batch["mask"], impl="pallas"))
+        _, _, _, t_pl = timed_pair(fused_ref, fused_pl, logits,
+                                   iters=max(iters // 4, 2), reps=2)
+        out["pallas_ms"] = t_pl * 1e3
+    except Exception as e:  # pallas path may be unavailable off-TPU
+        out["pallas_error"] = str(e)[:200]
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=4096)
+    ap.add_argument("--positions", type=int, default=10)
+    ap.add_argument("--docs", type=int, default=10_000)
+    ap.add_argument("--iters", type=int, default=20)
+    ap.add_argument("--out", default=os.path.join(os.path.dirname(__file__),
+                                                  "BENCH_recursions.json"))
+    args = ap.parse_args()
+
+    batch = make_batch(args.batch, args.positions, args.docs)
+    report = {"backend": jax.default_backend(),
+              "batch": args.batch, "positions": args.positions,
+              "models": {}}
+    for name in CHAIN_MODELS + ("ubm",):
+        report["models"][name] = bench_model(name, batch, args.docs,
+                                             args.positions, args.iters)
+        for label, row in report["models"][name].items():
+            print(f"{name:5s} {label:28s} scan {row['scan_ms']:8.3f} ms   "
+                  f"vec {row['vectorized_ms']:8.3f} ms   "
+                  f"x{row['speedup']:6.2f}   err {row['max_abs_err']:.2e}")
+    report["session_nll"] = bench_session_nll(batch, args.iters)
+    print("session_nll:", json.dumps(report["session_nll"], indent=2))
+
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

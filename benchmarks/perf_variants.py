@@ -26,6 +26,7 @@ from repro.configs.common import named, sds
 from repro.configs.lm_common import build_lm_cell
 from repro.distrib import masked_psum_lookup
 from repro.launch.hlo_cost import analyze_hlo
+from repro.compat import set_mesh
 from repro.launch.mesh import make_production_mesh
 from repro.optim.optimizers import ScaleByAdamState
 from repro.optim.sparse import (init_sparse_table_state, sparse_adamw_update,
@@ -36,7 +37,7 @@ PEAK_FLOPS, HBM_BW, LINK_BW = 197e12, 819e9, 50e9
 
 def measure(name, fn, args, in_sh, out_sh, donate=(), mesh=None):
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         compiled = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
                            donate_argnums=donate).lower(*args).compile()
     walk = analyze_hlo(compiled.as_text())

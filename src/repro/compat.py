@@ -1,0 +1,45 @@
+"""Version-compat shims for jax APIs that moved between releases.
+
+``shard_map`` graduated from ``jax.experimental.shard_map`` to ``jax.shard_map``
+and renamed ``check_rep`` to ``check_vma`` along the way. Model code targets the
+modern spelling; this shim maps it onto whichever API the installed jax has.
+"""
+from __future__ import annotations
+
+import inspect
+
+try:  # jax >= 0.6: top-level export with check_vma
+    from jax import shard_map as _shard_map
+except ImportError:  # older jax: experimental module with check_rep
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_ACCEPTS_CHECK_VMA = "check_vma" in inspect.signature(_shard_map).parameters
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, **kwargs):
+    if check_vma is not None:
+        kwargs["check_vma" if _ACCEPTS_CHECK_VMA else "check_rep"] = check_vma
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kwargs)
+
+
+def make_auto_mesh(axis_shapes, axis_names):
+    """jax.make_mesh with Auto axis types where supported, plain mesh before."""
+    import jax
+
+    try:
+        axis_types = (jax.sharding.AxisType.Auto,) * len(axis_names)
+        return jax.make_mesh(axis_shapes, axis_names, axis_types=axis_types)
+    except (AttributeError, TypeError):
+        return jax.make_mesh(axis_shapes, axis_names)
+
+
+def set_mesh(mesh):
+    """Context manager installing ``mesh``: jax.set_mesh on new jax, the
+    legacy ``with mesh:`` resource context before it existed."""
+    import jax
+
+    setter = getattr(jax, "set_mesh", None)
+    if setter is not None:
+        return setter(mesh)
+    return mesh  # Mesh is itself a context manager on older jax

@@ -74,9 +74,26 @@ class ClickModel(Module):
 
     # -- API -----------------------------------------------------------------
     def compute_loss(self, params, batch: Batch) -> jax.Array:
+        logits = self.predict_conditional_logits(params, batch)
+        if logits is not None:
+            # CTR-family fast path: one fused kernel from raw logits to the
+            # scalar loss, no (B, K) log-probability intermediates.
+            from repro.kernels import session_nll
+
+            return session_nll(logits, batch["clicks"], batch["mask"])
         log_probs = self.predict_conditional_clicks(params, batch)
         nll = log_bce(log_probs, batch["clicks"])
         return masked_mean(nll, batch["mask"])
+
+    def predict_conditional_logits(self, params, batch: Batch):
+        """Raw logits x with log P(C=1 | d, k, c_<k) = log sigmoid(x), or None.
+
+        Models whose conditional click probability is a single sigmoid (the
+        CTR family) override this; ``compute_loss`` then routes through the
+        fused ``session_nll`` kernel instead of log-space BCE.
+        """
+        del params, batch
+        return None
 
     def predict_clicks(self, params, batch: Batch) -> jax.Array:
         raise NotImplementedError

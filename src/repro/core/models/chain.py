@@ -1,9 +1,16 @@
 """Examination-chain models: DCM (A.7), CCM (A.8), DBN (A.9), SDBN.
 
 All share the structure: log P(C_k=1 | .) = log eps_k + log gamma_{d_k} with a
-model-specific log-space recursion for the examination chain eps. The
-recursions run as lax.scan over the position axis; sessions are right-padded
-so padded tail positions never influence real ones.
+model-specific examination chain eps. The chains run fully vectorized through
+``repro.core.recursions`` — marginal eps is a closed-form exclusive cumsum
+over per-position log continuation factors; conditional eps is an affine
+associative scan in death-odds space (clicks reset the odds, skips apply a
+Bayes growth factor) with saturation bounds documented there. Sessions are
+right-padded so padded tail positions never influence real ones.
+
+The former ``lax.scan`` implementations are kept as ``predict_clicks_scan`` /
+``predict_conditional_clicks_scan``: they are the equivalence oracles for
+tests/test_recursions.py and the baselines for benchmarks/bench_recursions.py.
 """
 from __future__ import annotations
 
@@ -20,22 +27,63 @@ from repro.core.parameterization import (
     ScalarParameterConfig,
     build_parameter,
 )
-from repro.stable import log1mexp, log_sigmoid, logsumexp
+from repro.core.recursions import (conditional_examination_odds,
+                                   marginal_examination)
+from repro.stable import (log1mexp, log_add_exp, log_sigmoid, sigmoid_core,
+                          sigmoid_parts)
 
 
 def _scan_positions(step, init, *arrays):
-    """Scan ``step`` over axis 1 of the given (B, K) arrays."""
+    """Scan ``step`` over axis 1 of the given (B, K) arrays (oracle path)."""
     xs = tuple(jnp.moveaxis(a, 1, 0) for a in arrays)
     _, ys = jax.lax.scan(step, init, xs)
     return jnp.moveaxis(ys, 0, 1)
 
 
-def _lse2(a, b):
-    """Elementwise log(exp(a) + exp(b)), stable."""
-    return logsumexp(jnp.stack([a, b], axis=-1), axis=-1)
+class _ChainModel(_PartsModel):
+    """Shared vectorized prediction plumbing for examination-chain models.
+
+    Subclasses provide ``_marginal_log_cont`` (per-position log continuation
+    factor f_k of the marginal chain) and ``_conditional_terms`` (the reset /
+    skip-continuation probabilities of the conditional chain). Both receive
+    the raw attraction logits: factors are assembled as positive sums of
+    sigmoids (sigma(-x) for complements), then a single log enters the
+    engine's cross-position accumulation."""
+
+    def _attr_logits(self, params, batch):
+        return self.parts["attraction"](params["attraction"], batch)
+
+    def _log_attr(self, params, batch):
+        return log_sigmoid(self._attr_logits(params, batch))
+
+    def _marginal_log_cont(self, params, batch, g, gn):
+        """Per-position log f_k from attraction gamma (g) / 1-gamma (gn)."""
+        raise NotImplementedError
+
+    def _conditional_terms(self, params, batch, g, gn):
+        """Returns (p_skip_survive, p_death, p_reset, p_reset_not)."""
+        raise NotImplementedError
+
+    def predict_clicks(self, params, batch):
+        g, gn, la, _ = sigmoid_parts(self._attr_logits(params, batch))
+        return marginal_examination(
+            self._marginal_log_cont(params, batch, g, gn)) + la
+
+    def predict_conditional_clicks(self, params, batch):
+        x = self._attr_logits(params, batch)
+        # sigmoid_core exposes the shared exp so the fused output reuses it:
+        # log eps + log gamma = -log1p(r) + min(x,0) - log1p(e) collapses to
+        # min(x,0) - log1p(r + e + r*e) — one log1p for the whole path.
+        e, t, pos = sigmoid_core(x)
+        g = jnp.where(pos, t, e * t)
+        gn = jnp.where(pos, e * t, t)
+        clicks = batch["clicks"].astype(jnp.float32)
+        r = conditional_examination_odds(
+            clicks, *self._conditional_terms(params, batch, g, gn))
+        return jnp.minimum(x, 0.0) - jnp.log1p(r + e + r * e)
 
 
-class DependentClickModel(_PartsModel):
+class DependentClickModel(_ChainModel):
     """DCM: after a click, continue browsing with rank-dependent lambda_k."""
 
     def __init__(self, query_doc_pairs: int = None, positions: int = 10,
@@ -53,24 +101,46 @@ class DependentClickModel(_PartsModel):
         }
 
     def _log_terms(self, params, batch):
-        la = log_sigmoid(self.parts["attraction"](params["attraction"], batch))
+        la = self._log_attr(params, batch)
         ll = log_sigmoid(self.parts["continuation"](params["continuation"], batch))
         return la, ll
 
-    def predict_clicks(self, params, batch):
-        """Eq. 27: eps_{k+1} = eps_k * (gamma*lambda + (1-gamma))."""
+    def _continuation_parts(self, params, batch):
+        """(lambda, 1-lambda) per position. For the default rank table the
+        sigmoids run on the (K,) table and the results are gathered — K
+        transcendentals instead of B*K."""
+        cont = self.parts["continuation"]
+        if isinstance(cont, PositionParameter):
+            lam_t, lam_not_t, _, _ = sigmoid_parts(
+                params["continuation"]["table"])
+            return cont.gather(lam_t, batch), cont.gather(lam_not_t, batch)
+        lam, lam_not, _, _ = sigmoid_parts(cont(params["continuation"], batch))
+        return lam, lam_not
+
+    def _marginal_log_cont(self, params, batch, g, gn):
+        """Eq. 27: f_k = gamma*lambda + (1-gamma)."""
+        lam, _ = self._continuation_parts(params, batch)
+        return jnp.log(g * lam + gn)
+
+    def _conditional_terms(self, params, batch, g, gn):
+        """Eq. 28: click -> eps = lambda_k; skip -> Bayes posterior (always
+        continue after a skip, so the skip chain never dies)."""
+        lam, lam_not = self._continuation_parts(params, batch)
+        return gn, jnp.zeros_like(gn), lam, lam_not
+
+    # -- scan oracles ----------------------------------------------------------
+    def predict_clicks_scan(self, params, batch):
         la, ll = self._log_terms(params, batch)
 
         def step(log_eps, xs):
             la_k, ll_k = xs
             log_p = log_eps + la_k
-            log_eps_next = log_eps + _lse2(la_k + ll_k, log1mexp(la_k))
+            log_eps_next = log_eps + log_add_exp(la_k + ll_k, log1mexp(la_k))
             return log_eps_next, log_p
 
         return _scan_positions(step, jnp.zeros(la.shape[0]), la, ll)
 
-    def predict_conditional_clicks(self, params, batch):
-        """Eq. 28: click -> eps = lambda_k; skip -> Bayes posterior."""
+    def predict_conditional_clicks_scan(self, params, batch):
         la, ll = self._log_terms(params, batch)
         clicks = batch["clicks"].astype(jnp.float32)
 
@@ -106,7 +176,7 @@ class DependentClickModel(_PartsModel):
                 "examination": jnp.moveaxis(examined, 0, 1)}
 
 
-class ClickChainModel(_PartsModel):
+class ClickChainModel(_ChainModel):
     """CCM: three continuation scenarios tau_1/2/3 (Eq. 29-30)."""
 
     def __init__(self, query_doc_pairs: int = None, positions: int = 10,
@@ -124,33 +194,59 @@ class ClickChainModel(_PartsModel):
             "tau_3": ScalarParameter(ScalarParameterConfig(init_prob=tau_init[2])),
         }
 
+    def _tau_logits(self, params, batch):
+        return tuple(self.parts[f"tau_{i}"](params[f"tau_{i}"], batch)
+                     for i in (1, 2, 3))
+
+    def _tau_logits_raw(self, params):
+        """0-d tau logits for the vectorized paths: transcendentals run on
+        the scalar, broadcasting happens after (the per-batch broadcast of
+        ``ScalarParameter`` would cost B*K identical sigmoids)."""
+        return tuple(params[f"tau_{i}"]["value"] for i in (1, 2, 3))
+
     def _log_terms(self, params, batch):
-        la = log_sigmoid(self.parts["attraction"](params["attraction"], batch))
-        lts = tuple(log_sigmoid(self.parts[f"tau_{i}"](params[f"tau_{i}"], batch))
-                    for i in (1, 2, 3))
+        la = self._log_attr(params, batch)
+        lts = tuple(log_sigmoid(t) for t in self._tau_logits(params, batch))
         return la, lts
 
-    def predict_clicks(self, params, batch):
+    def _marginal_log_cont(self, params, batch, g, gn):
+        """f_k = gamma*((1-gamma)tau2 + gamma*tau3) + (1-gamma)*tau1."""
+        x1, x2, x3 = self._tau_logits_raw(params)
+        inner = gn * jax.nn.sigmoid(x2) + g * jax.nn.sigmoid(x3)
+        return jnp.log(g * inner + gn * jax.nn.sigmoid(x1))
+
+    def _conditional_terms(self, params, batch, g, gn):
+        """Click -> restart with gamma*tau3 + (1-gamma)*tau2; skip -> continue
+        with tau1 before the Bayes update."""
+        x1, x2, x3 = self._tau_logits_raw(params)
+        t1, t1n, _, _ = sigmoid_parts(x1)
+        t2, t2n, _, _ = sigmoid_parts(x2)
+        t3, t3n, _, _ = sigmoid_parts(x3)
+        return (gn * t1, gn * t1n,
+                g * t3 + gn * t2, g * t3n + gn * t2n)
+
+    # -- scan oracles ----------------------------------------------------------
+    def predict_clicks_scan(self, params, batch):
         la, (lt1, lt2, lt3) = self._log_terms(params, batch)
 
         def step(log_eps, xs):
             la_k, lt1_k, lt2_k, lt3_k = xs
             log_p = log_eps + la_k
-            # gamma*((1-gamma)tau2 + gamma*tau3) + (1-gamma)*tau1
-            inner = _lse2(log1mexp(la_k) + lt2_k, la_k + lt3_k)
-            log_eps_next = log_eps + _lse2(la_k + inner, log1mexp(la_k) + lt1_k)
+            inner = log_add_exp(log1mexp(la_k) + lt2_k, la_k + lt3_k)
+            log_eps_next = log_eps + log_add_exp(la_k + inner,
+                                                 log1mexp(la_k) + lt1_k)
             return log_eps_next, log_p
 
         return _scan_positions(step, jnp.zeros(la.shape[0]), la, lt1, lt2, lt3)
 
-    def predict_conditional_clicks(self, params, batch):
+    def predict_conditional_clicks_scan(self, params, batch):
         la, (lt1, lt2, lt3) = self._log_terms(params, batch)
         clicks = batch["clicks"].astype(jnp.float32)
 
         def step(log_eps, xs):
             la_k, lt1_k, lt2_k, lt3_k, c_k = xs
             log_p = log_eps + la_k
-            click_branch = _lse2(la_k + lt3_k, log1mexp(la_k) + lt2_k)
+            click_branch = log_add_exp(la_k + lt3_k, log1mexp(la_k) + lt2_k)
             skip_branch = (log1mexp(la_k) + log_eps + lt1_k
                            - log1mexp(la_k + log_eps))
             log_eps_next = jnp.where(c_k > 0, click_branch, skip_branch)
@@ -185,7 +281,7 @@ class ClickChainModel(_PartsModel):
                 "examination": jnp.moveaxis(examined, 0, 1)}
 
 
-class DynamicBayesianNetwork(_PartsModel):
+class DynamicBayesianNetwork(_ChainModel):
     """DBN (Eq. 31-32): separate attraction and satisfaction, global lambda."""
 
     fixed_continuation = False  # SDBN overrides
@@ -209,17 +305,49 @@ class DynamicBayesianNetwork(_PartsModel):
             self.parts["continuation"] = ScalarParameter(
                 ScalarParameterConfig(init_prob=lambda_init))
 
-    def _log_terms(self, params, batch):
-        la = log_sigmoid(self.parts["attraction"](params["attraction"], batch))
-        ls = log_sigmoid(self.parts["satisfaction"](params["satisfaction"], batch))
+    def _lambda_logit(self, params, batch):
         if self.fixed_continuation:
-            lc = jnp.zeros_like(la)  # log(1)
-        else:
-            lc = log_sigmoid(self.parts["continuation"](params["continuation"], batch))
+            return None
+        return self.parts["continuation"](params["continuation"], batch)
+
+    def _lambda_logit_raw(self, params):
+        """0-d lambda logit for the vectorized paths (see _tau_logits_raw)."""
+        if self.fixed_continuation:
+            return None
+        return params["continuation"]["value"]
+
+    def _log_terms(self, params, batch):
+        la = self._log_attr(params, batch)
+        ls = log_sigmoid(self.parts["satisfaction"](params["satisfaction"], batch))
+        lam = self._lambda_logit(params, batch)
+        lc = jnp.zeros_like(la) if lam is None else log_sigmoid(lam)
         return la, ls, lc
 
-    def predict_clicks(self, params, batch):
-        """Eq. 31: eps_{k+1} = eps_k * lambda * (1 - gamma*sigma)."""
+    def _marginal_log_cont(self, params, batch, g, gn):
+        """Eq. 31: f_k = lambda * (1 - gamma*sigma)."""
+        x_sat = self.parts["satisfaction"](params["satisfaction"], batch)
+        # 1 - gamma*sigma = (1-gamma) + gamma*(1-sigma): a stable positive sum.
+        no_sat = gn + g * jax.nn.sigmoid(-x_sat)
+        lam = self._lambda_logit_raw(params)
+        if lam is None:  # SDBN: lambda = 1
+            return jnp.log(no_sat)
+        return jnp.log(jax.nn.sigmoid(lam) * no_sat)
+
+    def _conditional_terms(self, params, batch, g, gn):
+        """Eq. 32: click -> restart with lambda*(1-sigma); skip -> continue
+        with lambda before the Bayes update."""
+        x_sat = self.parts["satisfaction"](params["satisfaction"], batch)
+        sat, no_sat, _, _ = sigmoid_parts(x_sat)
+        lam = self._lambda_logit_raw(params)
+        if lam is None:  # SDBN: lambda = 1
+            return gn, jnp.zeros_like(gn), no_sat, sat
+        c, c_not, _, _ = sigmoid_parts(lam)
+        reset = c * no_sat
+        reset_not = c_not + c * sat  # 1 - lambda(1-sigma)
+        return gn * c, gn * c_not, reset, reset_not
+
+    # -- scan oracles ----------------------------------------------------------
+    def predict_clicks_scan(self, params, batch):
         la, ls, lc = self._log_terms(params, batch)
 
         def step(log_eps, xs):
@@ -230,8 +358,7 @@ class DynamicBayesianNetwork(_PartsModel):
 
         return _scan_positions(step, jnp.zeros(la.shape[0]), la, ls, lc)
 
-    def predict_conditional_clicks(self, params, batch):
-        """Eq. 32."""
+    def predict_conditional_clicks_scan(self, params, batch):
         la, ls, lc = self._log_terms(params, batch)
         clicks = batch["clicks"].astype(jnp.float32)
 

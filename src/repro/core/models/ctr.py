@@ -34,6 +34,9 @@ class GlobalCTR(_PartsModel):
     def predict_clicks(self, params, batch):
         return log_sigmoid(self.parts["rho"](params["rho"], batch))
 
+    def predict_conditional_logits(self, params, batch):
+        return self.parts["rho"](params["rho"], batch)
+
     def predict_relevance(self, params, batch):
         return self.predict_clicks(params, batch)
 
@@ -56,6 +59,9 @@ class RankCTR(_PartsModel):
 
     def predict_clicks(self, params, batch):
         return log_sigmoid(self.parts["theta"](params["theta"], batch))
+
+    def predict_conditional_logits(self, params, batch):
+        return self.parts["theta"](params["theta"], batch)
 
     def predict_relevance(self, params, batch):
         # rank-only model: no document signal; all docs tie.
@@ -83,6 +89,9 @@ class DocumentCTR(_PartsModel):
 
     def predict_clicks(self, params, batch):
         return log_sigmoid(self.parts["attraction"](params["attraction"], batch))
+
+    def predict_conditional_logits(self, params, batch):
+        return self.parts["attraction"](params["attraction"], batch)
 
     def predict_relevance(self, params, batch):
         return self.parts["attraction"](params["attraction"], batch)

@@ -18,6 +18,7 @@ from repro.core.parameterization import (
     UBMExaminationParameter,
     build_parameter,
 )
+from repro.core.recursions import ubm_marginal_clicks
 from repro.stable import log1mexp, log_sigmoid, logsumexp
 
 
@@ -58,7 +59,15 @@ class UserBrowsingModel(_PartsModel):
         return log_sigmoid(logit_e) + la
 
     def predict_clicks(self, params, batch):
-        """Eq. 26: marginalize over last-click paths, log-space, O(K^2)."""
+        """Eq. 26: marginalize over last-click paths — masked (B, K, K)
+        cumulative sums + one batched triangular solve (repro.core.recursions),
+        O(1) graph ops instead of the former O(K^2) unrolled double loop."""
+        attr_logits = self.parts["attraction"](params["attraction"], batch)
+        return ubm_marginal_clicks(attr_logits, params["examination"]["table"])
+
+    def predict_clicks_loop(self, params, batch):
+        """Former unrolled O(K^2) log-space recursion; the test oracle for
+        ``predict_clicks`` (tests/test_recursions.py)."""
         la = self._log_attr(params, batch)  # (B, K)
         lt = self._log_exam_table(params, batch)  # (B, K, K) [rank, last_click]
         K = la.shape[1]

@@ -195,9 +195,16 @@ class PositionParameter(Module):
         del rng
         return {"table": jnp.full((self.positions,), self.init_logit, jnp.float32)}
 
-    def __call__(self, params, batch):
+    def gather(self, values, batch):
+        """Index per-rank ``values`` (the logit table or any array derived
+        from it row-for-row) by the batch's 1-based positions. The single
+        home of this parameterization's index math — vectorized model paths
+        that transform the table before gathering must use it too."""
         pos = batch[self.use_feature] - 1  # 1-based -> 0-based
-        return jnp.take(params["table"], jnp.clip(pos, 0, self.positions - 1), axis=0)
+        return jnp.take(values, jnp.clip(pos, 0, self.positions - 1), axis=0)
+
+    def __call__(self, params, batch):
+        return self.gather(params["table"], batch)
 
 
 class UBMExaminationParameter(Module):

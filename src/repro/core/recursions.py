@@ -1,0 +1,255 @@
+"""Vectorized log-space examination recursions for chain click models.
+
+De Ruijt & Bhulai (2021, "The Generalized Cascade Click Model") observe that
+DCM, CCM, DBN and SDBN share one examination-chain structure. This module
+exploits that: both the marginal and the conditional examination probability
+of every chain model reduce to closed forms over per-position log factors, so
+the per-position ``lax.scan`` (K sequential steps of ~3 flops each) in the hot
+path is replaced by a handful of batched cumsum / gather / logsumexp ops.
+
+Marginal chain (``marginal_examination``)
+    eps_1 = 1 and eps_{k+1} = eps_k * f_k for a model-specific continuation
+    factor f_k, hence log eps_k = sum_{m<k} log f_m — one exclusive cumsum.
+
+Conditional chain (``conditional_examination``)
+    Clicks are regeneration points: given a click at position q the chain
+    restarts with examination probability rho_q (the model's post-click
+    reset), and skips evolve the posterior by Bayes' rule. Within the segment
+    after the last click, write
+
+        A_k = rho_q * prod_{q<m<k} (1-gamma_m) c_m     (survive every skip)
+        D_k = (1-rho_q) + sum_{q<j<k} A_j (1-gamma_j)(1-c_j)   (chain died)
+
+    where gamma is attraction and c the model's skip-continuation. In
+    death-odds space r = D / A the whole chain is ONE affine recurrence
+    solved by a single associative scan (log2 K parallel combine rounds of
+    fused multiply-adds, vs K sequential lax.scan steps), with exactly one
+    transcendental at the end: log eps = -log1p(r). Per-position factors are
+    positive products of sigmoids assembled via ``stable.sigmoid_parts``
+    (one exp + one log1p yields sigma(x), sigma(-x) and both log-sigmoids),
+    which cuts the hot path's transcendental count ~3x vs the log-space
+    scan. Exact while death odds stay below _ODDS_CAP (eps above ~1e-9);
+    beyond that the recurrence saturates to a finite value with zero
+    gradient (see the bound derivation at _ODDS_CAP) instead of tracking
+    probabilities no click log could ever resolve.
+
+UBM marginal (``ubm_marginal_clicks``)
+    Eq. 26's marginalization over last-click paths is a strictly triangular
+    linear recurrence lu = T0 + W @ lu. The path weights W are built with one
+    masked (B, K, K) cumulative sum; the recurrence is solved with a single
+    batched unit-triangular solve — O(1) graph ops instead of the former
+    O(K^2) Python double loop.
+
+The scan-based implementations remain on the models as ``*_scan`` methods and
+act as test oracles (tests/test_recursions.py) until the vectorized paths
+have soaked.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.stable import exclusive_cumsum, sigmoid_parts
+
+
+def marginal_examination(log_cont: jax.Array) -> jax.Array:
+    """log eps over positions from per-position log continuation factors.
+
+    log_cont: (B, K) with log f_k = log P(E_{k+1}=1 | E_k=1) marginalized over
+    the model's latents at position k. Returns (B, K) log eps, log eps_1 = 0.
+    """
+    return exclusive_cumsum(log_cont, axis=1)
+
+
+# Saturation bounds for the death-odds recurrence.
+#
+# * _ODDS_FLOOR floors probabilities entering a denominator, bounding each
+#   per-position growth factor at 1/floor = 1e9. Probabilities below 1e-9
+#   are unmeasurable in any realistic click log.
+# * _ODDS_CAP caps the odds value z (and reverse-mode cotangents): saturated
+#   sessions get a finite log-probability (>= -log1p(cap) ~ -20.7, still
+#   well below the repo's MIN_LOG_PROB = -13.8 floor convention) with zero
+#   gradient, never inf/NaN.
+# * _GROWTH_CAP caps only the *composite* growth products inside the scan's
+#   combine. It must be far above _ODDS_CAP: capping composites at the odds
+#   cap would break associativity for sub-cap results (a large composite
+#   applied to a tiny upstream z can land well below _ODDS_CAP and must stay
+#   exact). 1e28 keeps every product finite in float32 — composite * odds
+#   <= 1e37 forward and backward, and cotangent chains stay <= cap^2/floor^2
+#   = 1e36 — while only binding when z itself saturates or sits below 1e-19
+#   (odds no real session reaches).
+_ODDS_CAP = 1e9
+_ODDS_FLOOR = 1e-9
+_GROWTH_CAP = 1e28
+
+
+def _affine_scan_impl(a, b, signed_b=False):
+    """Capped inclusive solve of z_k = a_k * z_{k-1} + b_k (z_{-1} = 0).
+
+    One jax.lax.associative_scan — log2(K) parallel combine rounds, vs K
+    sequential lax.scan steps. The combine saturates at _ODDS_CAP: inputs
+    are pre-clamped, so every product stays below float32 max and saturated
+    spans give the same capped result for any combination tree. ``a`` must
+    be non-negative; ``b`` too unless ``signed_b`` (the reverse-mode pass,
+    whose cotangents carry sign and saturate two-sided).
+    """
+    cap = jnp.asarray(_ODDS_CAP, a.dtype)
+    growth_cap = jnp.asarray(_GROWTH_CAP, a.dtype)
+    clamp_b = (lambda x: jnp.clip(x, -cap, cap)) if signed_b else \
+        (lambda x: jnp.minimum(x, cap))
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return jnp.minimum(a1 * a2, growth_cap), clamp_b(a2 * b1 + b2)
+
+    _, z = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return z
+
+
+@jax.custom_vjp
+def _affine_scan(a, b):
+    """Capped affine recurrence with a saturating custom VJP.
+
+    The reverse pass of an affine recurrence is itself an affine recurrence
+    in the cotangents (u_k = cot_k + a_{k+1} u_{k+1}); running it through
+    the same capped scan keeps out-of-domain gradients at a large finite
+    value where naive autodiff would form inf * 0 = NaN (the cotangent
+    chain multiplies the raw a factors, which overflow for skip runs past
+    float32's probability range even though the primal saturates).
+    """
+    return _affine_scan_impl(a, b)
+
+
+def _affine_scan_fwd(a, b):
+    z = _affine_scan_impl(a, b)
+    return z, (a, z)
+
+
+def _affine_scan_bwd(res, cot):
+    a, z = res
+    # A saturated output sits on the cap's flat region: its true sensitivity
+    # is zero. Zeroing its cotangent both encodes that and blocks the
+    # astronomical chain products that would otherwise flow through the
+    # saturated span (capped forward + capped reverse do NOT reproduce the
+    # true cancellation — they overshoot by the ratio of true odds to cap).
+    # Saturation is absorbing within a segment (a >= 1, b >= 0 between
+    # resets), so every un-capped z_k has an exact, fully un-capped prefix
+    # and its gradient stays exact.
+    cap = jnp.asarray(_ODDS_CAP, a.dtype)
+    cot = jnp.where(z >= cap, 0.0, cot)
+    ones = jnp.ones_like(a[:, :1])
+    a_next = jnp.concatenate([a[:, 1:], ones], axis=1)       # a_{k+1}
+    u = _affine_scan_impl(a_next[:, ::-1], cot[:, ::-1],
+                          signed_b=True)[:, ::-1]
+    z_prev = jnp.pad(z[:, :-1], ((0, 0), (1, 0)))            # z_{k-1}
+    return u * z_prev, u
+
+
+_affine_scan.defvjp(_affine_scan_fwd, _affine_scan_bwd)
+
+
+def conditional_examination(clicks: jax.Array,
+                            p_skip_survive: jax.Array,
+                            p_death: jax.Array,
+                            p_reset: jax.Array,
+                            p_reset_not: jax.Array) -> jax.Array:
+    """Closed-form log P(E_k=1 | c_<k) for generalized cascade chains.
+
+    Works in death-odds space r_k = D_k / A_k, which collapses the whole
+    conditional chain to ONE affine recurrence with no transcendentals:
+
+      after a skip at k:   r_{k+1} = (r_k + p_death_k) / p_skip_survive_k
+      after a click at k:  r_{k+1} = p_reset_not_k / p_reset_k
+
+    and log eps_k = -log1p(r_k). Arguments (all (B, K)) arrive in
+    *probability* space — each is a positive product/sum of sigmoids the
+    model assembles to full relative precision from raw logits (sigma(-x)
+    for complements, never 1 - sigma(x)):
+
+      clicks          observed click indicators c_k.
+      p_skip_survive  (1-gamma_k) c_k: examined, skipped, kept browsing.
+      p_death         (1-gamma_k)(1-c_k): examined, skipped, abandoned.
+      p_reset         rho_k = P(E_{k+1}=1 | C_k=1), the post-click restart.
+      p_reset_not     1 - rho_k.
+
+    The virtual pre-session state is a sure click with rho = 1 (r_1 = 0).
+    Odds stay exact because every operation is a positive multiply-add;
+    beyond _ODDS_CAP the recurrence saturates finitely (zero gradient)
+    rather than overflowing.
+    """
+    return -jnp.log1p(conditional_examination_odds(
+        clicks, p_skip_survive, p_death, p_reset, p_reset_not))
+
+
+def conditional_examination_odds(clicks, p_skip_survive, p_death, p_reset,
+                                 p_reset_not):
+    """Death odds r_k = (1 - eps_k) / eps_k of ``conditional_examination``.
+
+    Exposed separately so callers can fuse the final log1p with other log
+    terms (log eps + log gamma = -log1p(r) + log sigma(x) folds into a
+    single log1p — see _ChainModel.predict_conditional_clicks).
+    """
+    floor = jnp.asarray(_ODDS_FLOOR, p_skip_survive.dtype)
+    cap = jnp.asarray(_ODDS_CAP, p_skip_survive.dtype)
+    clicked = (clicks > 0).astype(p_skip_survive.dtype)
+    keep = 1.0 - clicked
+    # z_k = r_{k+1}: every factor is used at its own position, and the result
+    # shifts right once at the end (r_0 = 0, the virtual sure-reset).
+    inv_s = keep / jnp.maximum(p_skip_survive, floor)
+    reset_odds = p_reset_not / jnp.maximum(p_reset, floor)
+    b = jnp.minimum(inv_s * p_death + clicked * reset_odds, cap)
+    z = _affine_scan(inv_s, b)
+    return jnp.pad(z[:, :-1], ((0, 0), (1, 0)))
+
+
+def ubm_marginal_clicks(attr_logits: jax.Array, exam_logits: jax.Array
+                        ) -> jax.Array:
+    """Vectorized UBM Eq. 26: log P(C_r=1) marginalized over last-click paths.
+
+    attr_logits: (B, K) attraction logits. exam_logits: (K, K) or (B, K, K)
+    examination logits theta[rank, last click], column 0 = no previous click,
+    column q+1 = last click at 0-based rank q. Returns (B, K) log click
+    probabilities.
+    """
+    b, k = attr_logits.shape
+    g, gn, log_attr, _ = sigmoid_parts(attr_logits)
+    th, th_not, log_exam, _ = sigmoid_parts(exam_logits)
+    if exam_logits.ndim == 2:
+        th_not = th_not[None]
+        log_exam = jnp.broadcast_to(log_exam[None], (b, k, k))
+    # log(1 - theta_{j,i} gamma_j), assembled as the stable positive sum
+    # (1-gamma) + gamma (1-theta) — one log, no (B, K, K) log1mexp chain.
+    lg_no_click = jnp.log(gn[:, :, None] + g[:, :, None] * th_not)
+    # Exclusive cumulative sum over rank j as one strict-tril matmul — on CPU
+    # a batched (K, K) GEMM is ~3x faster than XLA's strided-axis cumsum.
+    strict_tril = jnp.tril(jnp.ones((k, k), lg_no_click.dtype), -1)
+    ex_cs = jnp.einsum("jm,bmi->bji", strict_tril, lg_no_click)
+
+    # Source terms: no click before r — skip-run at column 0 from the top.
+    log_t0 = ex_cs[:, :, 0] + log_exam[:, :, 0] + log_attr
+
+    # Path weights W[r, q] (q < r): click at q, skip q+1..r-1 at column q+1,
+    # then click at r. The skip run is ex_cs[r, q+1] - cs[q, q+1]; the
+    # subtrahend is a diagonal of the inclusive sum ex_cs + lg, shifted one
+    # column right.
+    cs_diag = (jnp.diagonal(ex_cs[:, :, 1:], axis1=1, axis2=2)
+               + jnp.diagonal(lg_no_click[:, :, 1:], axis1=1, axis2=2))
+    cs_diag = jnp.pad(cs_diag, ((0, 0), (0, 1)))               # (B, K)
+    log_w = (ex_cs[:, :, 1:] - cs_diag[:, None, :-1]
+             + log_exam[:, :, 1:] + log_attr[:, :, None])      # (B, K, K-1)
+    log_w = jnp.pad(log_w, ((0, 0), (0, 0), (0, 1)), constant_values=-jnp.inf)
+
+    tri = jnp.arange(k)[None, :, None] > jnp.arange(k)[None, None, :]  # q < r
+    w = jnp.where(tri, jnp.exp(jnp.where(tri, log_w, -jnp.inf)), 0.0)
+
+    # lu = T0 + W @ lu with strictly lower-triangular W: one batched
+    # unit-triangular solve replaces the sequential recurrence. The solve
+    # runs in probability space, so sessions past float32's exp range
+    # saturate: flooring at tiny keeps the log finite and its gradient zero
+    # (instead of -inf forward / NaN backward) — the probability-space
+    # counterpart of the conditional chain's saturating odds cap.
+    eye = jnp.eye(k, dtype=w.dtype)[None]
+    lu = jax.scipy.linalg.solve_triangular(
+        eye - w, jnp.exp(log_t0)[:, :, None], lower=True, unit_diagonal=True)
+    return jnp.log(jnp.maximum(lu[:, :, 0], jnp.finfo(lu.dtype).tiny))

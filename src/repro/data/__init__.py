@@ -1,11 +1,12 @@
 """Data pipeline: synthetic click-log simulation + sharded, resumable loading."""
 from repro.data.synthetic import SyntheticConfig, generate_click_log, make_features
-from repro.data.loader import ClickLogLoader, split_sessions
+from repro.data.loader import ClickLogLoader, DevicePrefetcher, split_sessions
 
 __all__ = [
     "SyntheticConfig",
     "generate_click_log",
     "make_features",
     "ClickLogLoader",
+    "DevicePrefetcher",
     "split_sessions",
 ]

@@ -8,6 +8,7 @@ data-parallel input pipeline at pod scale).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Dict, Iterator, Optional, Tuple
 
@@ -99,3 +100,49 @@ class ClickLogLoader:
 
     def load_state_dict(self, d):
         self.state = LoaderState.from_dict(d)
+
+
+class DevicePrefetcher:
+    """Double-buffered device-put prefetch over one loader epoch.
+
+    Keeps ``size`` batches resident on device so the host->device copy of
+    batch i+1 (and the host-side slicing behind it) overlaps the
+    asynchronously dispatched step on batch i — the train loop never blocks
+    on input, and the per-batch ``jnp.asarray`` re-wrap disappears.
+
+    Iterating yields ``(device_batch, loader_state)`` pairs. ``loader_state``
+    is the loader's resume point recorded *when that batch was produced*;
+    mid-epoch checkpoints must save it (not ``loader.state_dict()``, which has
+    run up to ``size`` batches ahead) to stay bit-exact across preemption.
+    """
+
+    def __init__(self, loader, size: int = 2, device=None):
+        if size < 1:
+            raise ValueError(f"prefetch size must be >= 1, got {size}")
+        self.loader = loader
+        self.size = size
+        self.device = device
+
+    def _put(self, batch):
+        import jax
+
+        return {k: jax.device_put(v, self.device) for k, v in batch.items()}
+
+    def __iter__(self):
+        queue = collections.deque()
+        it = iter(self.loader)
+        get_state = getattr(self.loader, "state_dict", lambda: None)
+
+        def pull():
+            try:
+                batch = next(it)
+            except StopIteration:
+                return
+            queue.append((self._put(batch), get_state()))
+
+        for _ in range(self.size):
+            pull()
+        while queue:
+            item = queue.popleft()
+            pull()  # refill before handing control back to compute
+            yield item

@@ -2,10 +2,12 @@
 
 Kernels: embedding_bag (CLAX tables / recsys bags / GNN aggregation),
 fm_interaction (DeepFM), dcn_cross (DCN-V2 towers, paper Listing 4),
-flash_attention (BST / AutoInt / LM archs). See ops.py for the public API
-and ref.py for the oracles.
+flash_attention (BST / AutoInt / LM archs), session_nll (fused CTR-family
+click loss). See ops.py for the public API and ref.py for the oracles.
 """
-from repro.kernels.ops import embedding_bag, fm_interaction, dcn_cross, flash_attention
+from repro.kernels.ops import (embedding_bag, fm_interaction, dcn_cross,
+                               flash_attention, session_nll)
 from repro.kernels import ref
 
-__all__ = ["embedding_bag", "fm_interaction", "dcn_cross", "flash_attention", "ref"]
+__all__ = ["embedding_bag", "fm_interaction", "dcn_cross", "flash_attention",
+           "session_nll", "ref"]

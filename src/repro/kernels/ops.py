@@ -21,6 +21,7 @@ from repro.kernels.dcn_cross import dcn_cross_pallas
 from repro.kernels.embedding_bag import embedding_bag_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.fm_interaction import fm_interaction_pallas
+from repro.kernels.session_nll import session_nll_pallas
 
 
 def _default_impl() -> str:
@@ -83,6 +84,48 @@ def embedding_bag(table: jax.Array, ids: jax.Array,
     elif combiner != "sum":
         raise ValueError(f"unknown combiner {combiner!r}")
     return _embedding_bag(table, ids, weights, impl)
+
+
+# ---------------------------------------------------------------------------
+# session_nll with custom VJP
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _session_nll(logits, clicks, mask, impl):
+    if impl == "pallas":
+        return session_nll_pallas(logits, clicks, mask, interpret=_interpret())
+    return _ref.session_nll_ref(logits, clicks, mask)
+
+
+def _nll_fwd(logits, clicks, mask, impl):
+    return _session_nll(logits, clicks, mask, impl), (logits, clicks, mask)
+
+
+def _nll_bwd(impl, res, g):
+    logits, clicks, mask = res
+    x = logits.astype(jnp.float32)
+    c = clicks.astype(jnp.float32)
+    m = mask.astype(jnp.float32)
+    inv_count = 1.0 / jnp.maximum(jnp.sum(m), 1.0)
+    # d nll/dx = sigmoid(x) - c; d nll/dc = -x; both masked-mean weighted.
+    d_logits = (g * (jax.nn.sigmoid(x) - c) * m * inv_count).astype(logits.dtype)
+    d_clicks = (g * (-x) * m * inv_count).astype(clicks.dtype)
+    return d_logits, d_clicks, None
+
+
+_session_nll.defvjp(_nll_fwd, _nll_bwd)
+
+
+def session_nll(logits: jax.Array, clicks: jax.Array, mask: jax.Array,
+                impl: Optional[str] = None) -> jax.Array:
+    """Masked-mean Bernoulli click NLL straight from logits.
+
+    Fuses log_sigmoid -> log1mexp -> BCE -> masked mean in one pass over the
+    (B, K) tile; the scalar loss (and its closed-form VJP) never materializes
+    the per-element log-probability intermediates.
+    """
+    impl = impl or _default_impl()
+    return _session_nll(logits, clicks, mask, impl)
 
 
 # ---------------------------------------------------------------------------

@@ -72,6 +72,20 @@ def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
     return out.astype(q.dtype)
 
 
+def session_nll_ref(logits: jax.Array, clicks: jax.Array, mask: jax.Array
+                    ) -> jax.Array:
+    """Masked-mean Bernoulli click NLL from logits, written as the literal
+    log_sigmoid -> log1mexp -> BCE -> masked-mean composition the fused
+    kernel replaces. Returns a fp32 scalar."""
+    x = logits.astype(jnp.float32)
+    c = clicks.astype(jnp.float32)
+    m = mask.astype(jnp.float32)
+    log_p = -jax.nn.softplus(-x)                      # log sigmoid(x)
+    log_1mp = -jax.nn.softplus(x)                     # log(1 - sigmoid(x))
+    nll = -(c * log_p + (1.0 - c) * log_1mp)
+    return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+
+
 def segment_mean_ref(values: jax.Array, segment_ids: jax.Array,
                      num_segments: int) -> jax.Array:
     """Mean-aggregation by segment (the GraphSAGE aggregator oracle)."""

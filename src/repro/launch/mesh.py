@@ -5,17 +5,15 @@ device state.
 """
 from __future__ import annotations
 
-import jax
+from repro.compat import make_auto_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_auto_mesh(shape, axes)
 
 
 def make_smoke_mesh(n_devices: int = 1):
     """Single-host mesh for tests: (1, n) data x model."""
-    return jax.make_mesh((1, n_devices), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_auto_mesh((1, n_devices), ("data", "model"))

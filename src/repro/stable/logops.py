@@ -45,6 +45,35 @@ def log_sigmoid(x: jax.Array) -> jax.Array:
     return -jax.nn.softplus(-x)
 
 
+def sigmoid_core(x: jax.Array):
+    """The shared pieces every sigmoid-family quantity derives from:
+    (e, t, pos) with e = exp(-|x|), t = 1/(1+e), pos = x >= 0. Then
+    sigma(x) = t or e*t by sign, log sigma(x) = min(x, 0) - log1p(e), and
+    fused expressions can reuse e directly (e.g. the chain models' single
+    log1p over r + e + r*e)."""
+    e = jnp.exp(-jnp.abs(x))
+    return e, 1.0 / (1.0 + e), x >= 0
+
+
+def sigmoid_parts(x: jax.Array):
+    """(sigma(x), sigma(-x), log sigma(x), log sigma(-x)) from one exp + one
+    log1p.
+
+    Every chain-model factor is a positive combination of sigmoids and their
+    complements; computing the four quantities jointly (instead of two
+    sigmoids plus two softpluses) roughly halves the transcendental count of
+    the hot prediction paths. All four are exact: the complement is
+    sigma(-x), never the cancellation-prone 1 - sigma(x).
+    """
+    e, t, pos = sigmoid_core(x)
+    p = jnp.where(pos, t, e * t)
+    p_not = jnp.where(pos, e * t, t)
+    l = jnp.log1p(e)
+    log_p = jnp.minimum(x, 0.0) - l
+    log_p_not = -jnp.maximum(x, 0.0) - l
+    return p, p_not, log_p, log_p_not
+
+
 def log1m_sigmoid(x: jax.Array) -> jax.Array:
     """log(1 - sigmoid(x)) = log(sigmoid(-x)) = -softplus(x) (paper Eq. 17)."""
     return -jax.nn.softplus(x)
@@ -53,7 +82,9 @@ def log1m_sigmoid(x: jax.Array) -> jax.Array:
 def logsumexp(a: jax.Array, axis=None, where=None, keepdims: bool = False) -> jax.Array:
     """Max-shifted log-sum-exp (paper Eq. 16), mask-aware.
 
-    `where=False` entries contribute exp(-inf)=0 to the sum.
+    `where=False` entries contribute exp(-inf)=0 to the sum. A fully masked
+    reduction yields -inf with a zero (not NaN) gradient, so the vectorized
+    recursions can feed empty path sets straight through value_and_grad.
     """
     if where is not None:
         a = jnp.where(where, a, -jnp.inf)
@@ -61,10 +92,43 @@ def logsumexp(a: jax.Array, axis=None, where=None, keepdims: bool = False) -> ja
     # If every entry is masked the max is -inf; shift by 0 instead to avoid
     # (-inf) - (-inf) = nan. The result is then log(0) = -inf, as it should be.
     shift = jnp.where(jnp.isfinite(a_max), a_max, 0.0)
-    out = jnp.log(jnp.sum(jnp.exp(a - shift), axis=axis, keepdims=True)) + shift
+    total = jnp.sum(jnp.exp(a - shift), axis=axis, keepdims=True)
+    empty = total == 0.0
+    out = jnp.where(empty, -jnp.inf,
+                    jnp.log(jnp.where(empty, 1.0, total)) + shift)
     if not keepdims:
         out = jnp.reshape(out, jnp.max(a, axis=axis).shape)
     return out
+
+
+def log_add_exp(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Elementwise log(exp(a) + exp(b)), the 2-ary logsumexp.
+
+    Delegates to jnp.logaddexp, whose custom JVP keeps gradients finite at
+    (-inf, -inf) — the "both events impossible" corner every chain recursion
+    hits on its virtual start segment.
+    """
+    return jnp.logaddexp(a, b)
+
+
+def exclusive_cumsum(a: jax.Array, axis: int = -1) -> jax.Array:
+    """Cumulative sum shifted right along ``axis``: out_k = sum_{m<k} a_m.
+
+    out_0 is exactly 0 (not incl_0 - a_0, which reintroduces rounding), so a
+    chain recursion's first position carries the exact initial state.
+    """
+    incl = jnp.cumsum(a, axis=axis)
+    n = a.shape[axis]
+    head = jnp.zeros_like(jax.lax.slice_in_dim(incl, 0, 1, axis=axis))
+    return jnp.concatenate(
+        [head, jax.lax.slice_in_dim(incl, 0, n - 1, axis=axis)], axis=axis)
+
+
+def log_cumsum(a: jax.Array, axis: int = -1) -> jax.Array:
+    """Running log-sum-exp along ``axis``: the log-space cumulative sum of
+    probabilities, out_k = log sum_{m<=k} exp(a_m). One XLA op (associative
+    scan), no Python loop."""
+    return jax.lax.cumlogsumexp(a, axis=axis)
 
 
 def log_not(log_p: jax.Array) -> jax.Array:

@@ -16,12 +16,12 @@ import time
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro import optim as optim_lib
 from repro.core.metrics import (ConditionalPerplexity, LogLikelihood, MultiMetric,
                                 Perplexity)
+from repro.data.loader import DevicePrefetcher
 from repro.train.checkpoints import CheckpointManager
 from repro.train.fault_tolerance import PreemptionHandler
 
@@ -109,8 +109,11 @@ class Trainer:
         while state.epoch < self.epochs:
             t0 = time.time()
             train_loss, n_batches = 0.0, 0
-            for batch in iter(train_loader):
-                batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            # Prefetch keeps the next batch on device while the (async
+            # dispatched) step runs; loader_state is the bit-exact resume
+            # point for the batch being trained, since the loader itself has
+            # run ahead by the prefetch depth.
+            for batch, loader_state in DevicePrefetcher(train_loader):
                 state.params, state.opt_state, loss = step_fn(
                     state.params, state.opt_state, batch)
                 train_loss += float(loss)
@@ -118,9 +121,9 @@ class Trainer:
                 state.global_step += 1
                 if (self.ckpt and self.checkpoint_every_steps and
                         state.global_step % self.checkpoint_every_steps == 0):
-                    self._save(state, train_loader)
+                    self._save(state, train_loader, loader_state)
                 if preempt and preempt.should_stop:
-                    self._save(state, train_loader)
+                    self._save(state, train_loader, loader_state)
                     self.log_fn("[trainer] preempted; checkpoint written")
                     return history
             state.epoch += 1
@@ -151,8 +154,7 @@ class Trainer:
         metrics = self.metrics_factory()
         eval_step = self._make_eval_step(model, metrics)
         m_state = None
-        for batch in iter(loader):
-            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        for batch, _ in DevicePrefetcher(loader):
             if m_state is None:
                 m_state = metrics.init_state(batch["positions"].shape[1])
             m_state = eval_step(params, m_state, batch)
@@ -172,8 +174,8 @@ class Trainer:
         return self.evaluate(model, params, test_loader, per_rank=per_rank)
 
     # -- internals -------------------------------------------------------------------
-    def _save(self, state: TrainState, loader):
+    def _save(self, state: TrainState, loader, loader_state=None):
         self.ckpt.save(state.global_step,
                        {"params": state.params, "opt_state": state.opt_state},
                        aux={"epoch": state.epoch, "global_step": state.global_step,
-                            "loader": loader.state_dict()})
+                            "loader": loader_state or loader.state_dict()})

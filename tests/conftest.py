@@ -8,6 +8,67 @@ import jax
 import numpy as np
 import pytest
 
+try:  # pragma: no cover - only exercised on images without hypothesis
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    # Hermetic test images may lack hypothesis and nothing can be installed.
+    # Register a tiny deterministic stand-in covering the subset this repo
+    # uses: @given / @settings over integers / floats / lists strategies.
+    import functools
+    import inspect
+    import random
+    import sys
+    import types
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    def _integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    def _floats(min_value, max_value, **_):
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    def _lists(elements, min_size=0, max_size=10):
+        def draw(rng):
+            n = rng.randint(min_size, max_size)
+            return [elements.draw(rng) for _ in range(n)]
+
+        return _Strategy(draw)
+
+    def _settings(max_examples=100, **_):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def _given(*strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_max_examples",
+                            getattr(fn, "_max_examples", 25))
+                rng = random.Random(0)
+                for _ in range(n):
+                    drawn = [s.draw(rng) for s in strategies]
+                    fn(*args, *drawn, **kwargs)
+
+            # Hide the strategy parameters from pytest's fixture resolution.
+            del wrapper.__wrapped__
+            wrapper.__signature__ = inspect.Signature()
+            return wrapper
+
+        return deco
+
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.integers, _st.floats, _st.lists = _integers, _floats, _lists
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given, _hyp.settings, _hyp.strategies = _given, _settings, _st
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st
+
 jax.config.update("jax_default_matmul_precision", "highest")
 
 

@@ -158,6 +158,7 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.compat import make_auto_mesh, set_mesh
 from repro.models.lm import LMConfig, init_params, forward
 
 # capacity_factor >= n_experts => lossless routing => shard_map == dense oracle
@@ -169,9 +170,8 @@ params = init_params(cfg, jax.random.PRNGKey(0))
 toks = jax.random.randint(jax.random.PRNGKey(1), (4, 8), 0, 64)
 dense = forward(cfg, params, toks, mesh=None)
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
-with jax.set_mesh(mesh):
+mesh = make_auto_mesh((2, 4), ("data", "model"))
+with set_mesh(mesh):
     sharded = jax.jit(lambda p, t: forward(cfg, p, t, mesh=mesh))(params, toks)
 err = float(jnp.max(jnp.abs(dense.astype(jnp.float32) - sharded.astype(jnp.float32))))
 assert err < 2e-2, err
@@ -183,7 +183,10 @@ def test_moe_shard_map_matches_dense_oracle():
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.abspath(
         os.path.join(os.path.dirname(__file__), "..", "src"))
-    env.pop("JAX_PLATFORMS", None)
+    # Pin the subprocess to CPU: probing other platform plugins (e.g. the
+    # baked-in TPU runtime on dev images) can stall minutes in metadata
+    # retries. --xla_force_host_platform_device_count still applies on cpu.
+    env["JAX_PLATFORMS"] = "cpu"
     proc = subprocess.run([sys.executable, "-c", MOE_ORACLE_SCRIPT],
                           capture_output=True, text=True, env=env, timeout=600)
     assert proc.returncode == 0, proc.stderr[-3000:]
@@ -195,6 +198,7 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, dataclasses
 from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.compat import make_auto_mesh, set_mesh
 from repro.models.lm import LMConfig, init_params, init_cache, make_decode_step, forward
 
 cfg0 = LMConfig(name="m", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
@@ -204,9 +208,8 @@ params = init_params(cfg0, jax.random.PRNGKey(0))
 toks = jax.random.randint(jax.random.PRNGKey(1), (4, 8), 0, 64)
 nxt = jax.random.randint(jax.random.PRNGKey(3), (4, 1), 0, 64)
 ref = forward(cfg0, params, jnp.concatenate([toks, nxt], 1))[:, -1]
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
-with jax.set_mesh(mesh):
+mesh = make_auto_mesh((2, 4), ("data", "model"))
+with set_mesh(mesh):
     cache = init_cache(cfg0, batch=4, max_seq=16)
     dec_dense = make_decode_step(cfg0, mesh=mesh)
     for i in range(8):
@@ -227,7 +230,10 @@ def test_flash_decode_matches_dense():
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.abspath(
         os.path.join(os.path.dirname(__file__), "..", "src"))
-    env.pop("JAX_PLATFORMS", None)
+    # Pin the subprocess to CPU: probing other platform plugins (e.g. the
+    # baked-in TPU runtime on dev images) can stall minutes in metadata
+    # retries. --xla_force_host_platform_device_count still applies on cpu.
+    env["JAX_PLATFORMS"] = "cpu"
     proc = subprocess.run([sys.executable, "-c", FLASH_DECODE_SCRIPT],
                           capture_output=True, text=True, env=env, timeout=600)
     assert proc.returncode == 0, proc.stderr[-3000:]
@@ -238,6 +244,7 @@ DST_PARTITIONED_SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np, dataclasses
+from repro.compat import make_auto_mesh, set_mesh
 from repro.models.gnn import SAGEConfig, init_params, random_graph
 from repro.models.gnn.graphsage import full_graph_forward
 
@@ -262,9 +269,8 @@ cfg0 = SAGEConfig(n_layers=2, d_in=12, d_hidden=16, n_classes=4)
 cfg1 = dataclasses.replace(cfg0, partitioned_edges=True)
 params = init_params(cfg0, jax.random.PRNGKey(0))
 dense = full_graph_forward(cfg0, params, {k: jnp.asarray(v) for k, v in g.items()})
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
-with jax.set_mesh(mesh):
+mesh = make_auto_mesh((2, 4), ("data", "model"))
+with set_mesh(mesh):
     out = jax.jit(lambda p, gr: full_graph_forward(cfg1, p, gr, mesh))(
         params, {k: jnp.asarray(v) for k, v in gp.items()})
 err = float(jnp.max(jnp.abs(out - dense)))
@@ -277,7 +283,10 @@ def test_gnn_dst_partitioned_matches_dense():
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.abspath(
         os.path.join(os.path.dirname(__file__), "..", "src"))
-    env.pop("JAX_PLATFORMS", None)
+    # Pin the subprocess to CPU: probing other platform plugins (e.g. the
+    # baked-in TPU runtime on dev images) can stall minutes in metadata
+    # retries. --xla_force_host_platform_device_count still applies on cpu.
+    env["JAX_PLATFORMS"] = "cpu"
     proc = subprocess.run([sys.executable, "-c", DST_PARTITIONED_SCRIPT],
                           capture_output=True, text=True, env=env, timeout=600)
     assert proc.returncode == 0, proc.stderr[-3000:]

@@ -78,19 +78,19 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.compat import make_auto_mesh, set_mesh
 from repro.distrib import masked_psum_lookup
 from repro.distrib.compression import compressed_psum, CompressedAllReduce
-from jax import shard_map
+from repro.compat import shard_map
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_auto_mesh((2, 4), ("data", "model"))
 
 # --- masked psum lookup == dense take -----------------------------------------
 N, D, B, K = 64, 4, 8, 5
 rng = np.random.default_rng(0)
 table = jnp.asarray(rng.normal(size=(N, D)).astype(np.float32))
 ids = jnp.asarray(rng.integers(0, N, size=(B, K)))
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     lookup = masked_psum_lookup(mesh, batch_dims=2)
     got = jax.jit(lookup)(
         jax.device_put(table, NamedSharding(mesh, P("model", None))),
@@ -135,7 +135,10 @@ def test_shard_map_paths_on_8_fake_devices():
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.abspath(
         os.path.join(os.path.dirname(__file__), "..", "src"))
-    env.pop("JAX_PLATFORMS", None)
+    # Pin the subprocess to CPU: probing other platform plugins (e.g. the
+    # baked-in TPU runtime on dev images) can stall minutes in metadata
+    # retries. --xla_force_host_platform_device_count still applies on cpu.
+    env["JAX_PLATFORMS"] = "cpu"
     proc = subprocess.run([sys.executable, "-c", MULTIDEV_SCRIPT],
                           capture_output=True, text=True, env=env, timeout=300)
     assert proc.returncode == 0, proc.stderr[-3000:]

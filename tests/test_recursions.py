@@ -1,0 +1,314 @@
+"""Vectorized recursion engine vs the retired scan/loop oracles.
+
+The chain models (DCM/CCM/DBN/SDBN) and UBM keep their original sequential
+implementations as ``predict_*_scan`` / ``predict_clicks_loop`` methods; every
+vectorized path must reproduce them — values AND gradients — on random padded
+batches. Also covers the fused session_nll kernel against its jnp oracle.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import MODEL_REGISTRY
+from repro.core.base import masked_mean
+from repro.kernels import ref, session_nll
+from repro.stable import exclusive_cumsum, log_add_exp, log_bce, log_cumsum
+
+CHAIN_MODELS = ("dcm", "ccm", "dbn", "sdbn")
+N_DOCS = 60
+
+
+def make_padded_batch(seed, b=8, k=10, click_p=0.35):
+    rng = np.random.default_rng(seed)
+    n_real = rng.integers(1, k + 1, size=b)
+    mask = np.arange(k)[None, :] < n_real[:, None]
+    clicks = (rng.random((b, k)) < click_p).astype(np.float32)
+    return {
+        "positions": jnp.asarray(np.tile(np.arange(1, k + 1), (b, 1)), jnp.int32),
+        "query_doc_ids": jnp.asarray(rng.integers(0, N_DOCS, (b, k))),
+        "clicks": jnp.asarray(clicks),
+        "mask": jnp.asarray(mask),
+    }
+
+
+def randomized_model(name, seed, k=10):
+    model = MODEL_REGISTRY[name](query_doc_pairs=N_DOCS, positions=k)
+    params = model.init(jax.random.PRNGKey(seed))
+    params = jax.tree_util.tree_map(
+        lambda x: x + 0.9 * jax.random.normal(jax.random.PRNGKey(seed + 1),
+                                              x.shape), params)
+    return model, params
+
+
+# ---------------------------------------------------------------------------
+# value equivalence: vectorized engine == scan oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", CHAIN_MODELS)
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_chain_marginal_matches_scan(name, seed):
+    model, params = randomized_model(name, 3 * seed + 11)
+    batch = make_padded_batch(seed)
+    got = np.asarray(model.predict_clicks(params, batch))
+    want = np.asarray(model.predict_clicks_scan(params, batch))
+    np.testing.assert_allclose(got, want, atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("name", CHAIN_MODELS)
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_chain_conditional_matches_scan(name, seed):
+    model, params = randomized_model(name, 3 * seed + 17)
+    batch = make_padded_batch(seed, click_p=0.5)
+    got = np.asarray(model.predict_conditional_clicks(params, batch))
+    want = np.asarray(model.predict_conditional_clicks_scan(params, batch))
+    np.testing.assert_allclose(got, want, atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("clicks_case", ["none", "all", "first", "last"])
+@pytest.mark.parametrize("name", CHAIN_MODELS)
+def test_chain_conditional_click_patterns(name, clicks_case):
+    """Degenerate click patterns: no clicks, every position, boundary clicks."""
+    model, params = randomized_model(name, 23)
+    batch = make_padded_batch(7)
+    b, k = batch["clicks"].shape
+    c = {"none": np.zeros((b, k)), "all": np.ones((b, k)),
+         "first": np.eye(1, k, 0).repeat(b, 0),
+         "last": np.eye(1, k, k - 1).repeat(b, 0)}[clicks_case]
+    batch = dict(batch, clicks=jnp.asarray(c, jnp.float32))
+    got = np.asarray(model.predict_conditional_clicks(params, batch))
+    want = np.asarray(model.predict_conditional_clicks_scan(params, batch))
+    np.testing.assert_allclose(got, want, atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_ubm_marginal_matches_loop(seed):
+    model, params = randomized_model("ubm", 5 * seed + 29)
+    batch = make_padded_batch(seed)
+    got = np.asarray(model.predict_clicks(params, batch))
+    want = np.asarray(model.predict_clicks_loop(params, batch))
+    np.testing.assert_allclose(got, want, atol=1e-5, rtol=1e-5)
+
+
+def test_ubm_marginal_gradients_match_loop():
+    model, params = randomized_model("ubm", 31)
+    batch = make_padded_batch(3)
+
+    def total(fn):
+        return lambda p: jnp.sum(
+            jnp.where(batch["mask"], fn(p, batch), 0.0))
+
+    g_vec = jax.grad(total(model.predict_clicks))(params)
+    g_loop = jax.grad(total(model.predict_clicks_loop))(params)
+    for gv, gl in zip(jax.tree_util.tree_leaves(g_vec),
+                      jax.tree_util.tree_leaves(g_loop)):
+        assert np.all(np.isfinite(np.asarray(gv)))
+        np.testing.assert_allclose(np.asarray(gv), np.asarray(gl),
+                                   atol=1e-5, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# gradient equivalence through compute_loss
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", CHAIN_MODELS)
+def test_chain_loss_gradients_match_scan(name):
+    model, params = randomized_model(name, 41)
+    batch = make_padded_batch(5, click_p=0.5)
+
+    def scan_loss(p):
+        lp = model.predict_conditional_clicks_scan(p, batch)
+        return masked_mean(log_bce(lp, batch["clicks"]), batch["mask"])
+
+    loss_vec, g_vec = jax.value_and_grad(model.compute_loss)(params, batch)
+    loss_scan, g_scan = jax.value_and_grad(scan_loss)(params)
+    np.testing.assert_allclose(float(loss_vec), float(loss_scan), rtol=1e-6)
+    for gv, gs in zip(jax.tree_util.tree_leaves(g_vec),
+                      jax.tree_util.tree_leaves(g_scan)):
+        assert np.all(np.isfinite(np.asarray(gv))), name
+        np.testing.assert_allclose(np.asarray(gv), np.asarray(gs),
+                                   atol=1e-5, rtol=1e-4, err_msg=name)
+
+
+@pytest.mark.parametrize("click_p", [0.0, 0.4])
+@pytest.mark.parametrize("name", CHAIN_MODELS)
+def test_chain_conditional_extreme_logits_stay_finite(name, click_p):
+    """Skip runs whose odds leave the saturation domain must clamp, not NaN.
+
+    The scan oracle stays finite in log space; the odds-space engine
+    saturates at a large finite value — either way the loss must not be
+    poisoned by one outlier session. Covers both all-skip sessions and
+    sessions with clicks (resets exercise the reset-odds branch)."""
+    model, params = randomized_model(name, 57)
+    # drive every logit to +36: P(skip) ~ e^-36 per position
+    params = jax.tree_util.tree_map(lambda x: jnp.abs(x) * 0 + 36.0, params)
+    batch = make_padded_batch(1, click_p=click_p)
+    if click_p == 0.0:
+        batch = dict(batch, clicks=jnp.zeros_like(batch["clicks"]))
+    lp = np.asarray(model.predict_conditional_clicks(params, batch))
+    assert np.all(np.isfinite(lp) | (lp == -np.inf)), lp
+    assert not np.any(np.isnan(lp)), lp
+    loss, grads = jax.value_and_grad(model.compute_loss)(params, batch)
+    assert np.isfinite(float(loss))
+    for g in jax.tree_util.tree_leaves(grads):
+        assert np.all(np.isfinite(np.asarray(g)))
+        # saturated regions must contribute ~zero gradient, not the
+        # finite-but-astronomical products of capped backward chains
+        assert np.max(np.abs(np.asarray(g))) < 100.0
+
+
+@pytest.mark.parametrize("scale", [10.0, 14.0])
+def test_chain_conditional_saturation_boundary_gradients(scale):
+    """Clicks after long skip runs straddle the odds cap: gradients must stay
+    at the scan path's scale (the capped VJP once returned ~1e15 here)."""
+    for name in CHAIN_MODELS:
+        model, params = randomized_model(name, 71)
+        params = jax.tree_util.tree_map(lambda x: jnp.abs(x) * 0 + scale,
+                                        params)
+        b, k = 4, 10
+        clicks = np.zeros((b, k), np.float32)
+        clicks[:, -1] = 1.0  # click after a 9-skip run
+        batch = make_padded_batch(9, b=b, k=k)
+        batch = dict(batch, clicks=jnp.asarray(clicks),
+                     mask=jnp.ones((b, k), bool))
+        grads = jax.grad(model.compute_loss)(params, batch)
+        for g in jax.tree_util.tree_leaves(grads):
+            arr = np.asarray(g)
+            assert np.all(np.isfinite(arr)), name
+            assert np.max(np.abs(arr)) < 100.0, (name, scale,
+                                                 float(np.max(np.abs(arr))))
+
+
+def test_affine_scan_growth_products_stay_exact_below_odds_cap():
+    """Composite growth factors above the odds cap but applied to tiny odds
+    must stay exact: capping composites at the odds cap breaks associativity
+    (regression: z3 came out 1e5 instead of 1e8)."""
+    from repro.core.recursions import _affine_scan
+
+    a = jnp.asarray([[0.0, 1e6, 1e6, 1e6]])
+    b = jnp.asarray([[1e-10, 0.0, 0.0, 0.0]])
+    z = np.asarray(_affine_scan(a, b))[0]
+    np.testing.assert_allclose(z, [1e-10, 1e-4, 1e2, 1e8], rtol=1e-5)
+
+
+def test_dcm_conditional_large_but_subcap_odds_match_scan():
+    """High attraction + near-certain continuation: death odds grow by ~1e6
+    per skip yet stay below the odds cap — the vectorized path must agree
+    with the scan oracle through that window."""
+    model = MODEL_REGISTRY["dcm"](query_doc_pairs=N_DOCS, positions=5)
+    params = model.init(jax.random.PRNGKey(0))
+    params = jax.tree_util.tree_map(lambda x: jnp.abs(x) * 0, params)
+    params["attraction"]["table"] = params["attraction"]["table"] + 13.8
+    params["continuation"]["table"] = params["continuation"]["table"] + 23.0
+    clicks = np.zeros((2, 5), np.float32)
+    clicks[:, 0] = 1.0  # click at rank 1, then all skips
+    batch = dict(make_padded_batch(0, b=2, k=5), clicks=jnp.asarray(clicks),
+                 mask=jnp.ones((2, 5), bool))
+    got = np.asarray(model.predict_conditional_clicks(params, batch))
+    want = np.asarray(model.predict_conditional_clicks_scan(params, batch))
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+
+def test_ubm_marginal_extreme_logits_stay_finite():
+    """The probability-space solve must saturate (finite log, zero grad)
+    when path probabilities underflow float32, not emit -inf/NaN."""
+    model, params = randomized_model("ubm", 61)
+    params = jax.tree_util.tree_map(lambda x: jnp.abs(x) * 0 - 60.0, params)
+    batch = make_padded_batch(2)
+
+    def total(p):
+        return jnp.sum(jnp.where(batch["mask"],
+                                 model.predict_clicks(p, batch), 0.0))
+
+    lp = np.asarray(model.predict_clicks(params, batch))
+    assert np.all(np.isfinite(lp)), lp
+    for g in jax.tree_util.tree_leaves(jax.grad(total)(params)):
+        assert np.all(np.isfinite(np.asarray(g)))
+
+
+# ---------------------------------------------------------------------------
+# stable primitives used by the engine
+# ---------------------------------------------------------------------------
+
+def test_exclusive_cumsum_matches_numpy():
+    x = np.random.default_rng(0).normal(size=(4, 7)).astype(np.float32)
+    got = np.asarray(exclusive_cumsum(jnp.asarray(x), axis=1))
+    want = np.concatenate([np.zeros((4, 1)), np.cumsum(x, 1)[:, :-1]], 1)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+    assert np.all(got[:, 0] == 0.0)
+
+
+def test_log_cumsum_matches_running_logsumexp():
+    x = np.random.default_rng(1).normal(size=(3, 9)).astype(np.float64) * 5
+    got = np.asarray(log_cumsum(jnp.asarray(x), axis=1))
+    probs = np.cumsum(np.exp(x), axis=1)
+    np.testing.assert_allclose(got, np.log(probs), rtol=1e-5)
+
+
+def test_log_add_exp_matches_logaddexp_and_handles_neg_inf():
+    a = jnp.asarray([0.0, -5.0, -jnp.inf, -jnp.inf])
+    b = jnp.asarray([-1.0, -jnp.inf, -2.0, -jnp.inf])
+    got = np.asarray(log_add_exp(a, b))
+    np.testing.assert_allclose(got[:3], np.logaddexp(np.asarray(a)[:3],
+                                                     np.asarray(b)[:3]))
+    assert got[3] == -np.inf
+
+
+# ---------------------------------------------------------------------------
+# session_nll kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,K", [(4, 5), (37, 10), (256, 10), (130, 200)])
+@pytest.mark.parametrize("impl", ["ref", "pallas"])
+def test_session_nll_matches_oracle(B, K, impl):
+    rng = np.random.default_rng(B + K)
+    x = jnp.asarray(rng.normal(size=(B, K)).astype(np.float32) * 4)
+    c = jnp.asarray(rng.integers(0, 2, (B, K)).astype(np.float32))
+    m = jnp.asarray(rng.random((B, K)) < 0.8)
+    got = float(session_nll(x, c, m, impl=impl))
+    want = float(ref.session_nll_ref(x, c, m))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_session_nll_matches_logspace_composition():
+    """Fused kernel == the log_sigmoid -> log1mexp -> BCE -> masked-mean path."""
+    from repro.stable import log_sigmoid
+
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(16, 10)).astype(np.float32) * 3)
+    c = jnp.asarray(rng.integers(0, 2, (16, 10)).astype(np.float32))
+    m = jnp.asarray(rng.random((16, 10)) < 0.7)
+    composed = masked_mean(log_bce(log_sigmoid(x), c), m)
+    for impl in ("ref", "pallas"):
+        np.testing.assert_allclose(float(session_nll(x, c, m, impl=impl)),
+                                   float(composed), rtol=1e-5)
+
+
+@pytest.mark.parametrize("impl", ["ref", "pallas"])
+def test_session_nll_gradients(impl):
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.normal(size=(12, 10)).astype(np.float32) * 3)
+    c = jnp.asarray(rng.integers(0, 2, (12, 10)).astype(np.float32))
+    m = jnp.asarray(rng.random((12, 10)) < 0.8)
+    g = jax.grad(lambda xx: session_nll(xx, c, m, impl=impl))(x)
+    # closed form: (sigmoid(x) - c) * mask / count
+    mf = np.asarray(m, np.float32)
+    want = ((1 / (1 + np.exp(-np.asarray(x))) - np.asarray(c)) * mf
+            / max(mf.sum(), 1.0))
+    np.testing.assert_allclose(np.asarray(g), want, rtol=1e-5, atol=1e-7)
+    # masked positions contribute no gradient
+    assert np.all(np.asarray(g)[~np.asarray(m)] == 0.0)
+
+
+def test_session_nll_respects_mask():
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=(8, 6)).astype(np.float32))
+    c = jnp.asarray(rng.integers(0, 2, (8, 6)).astype(np.float32))
+    m = np.ones((8, 6), bool)
+    m[:, -2:] = False
+    x2 = np.asarray(x).copy()
+    x2[:, -2:] = 99.0  # scramble masked logits
+    for impl in ("ref", "pallas"):
+        a = float(session_nll(x, c, jnp.asarray(m), impl=impl))
+        bb = float(session_nll(jnp.asarray(x2), c, jnp.asarray(m), impl=impl))
+        np.testing.assert_allclose(a, bb, rtol=1e-6)
