@@ -1,0 +1,152 @@
+"""Ingest + streaming throughput for the out-of-core session store.
+
+Measures, for a synthetic DBN log of --sessions sessions:
+
+  * **ingest** — chunked generation (``iter_click_log_chunks``, chunk size
+    --chunk < sessions/10 by default) streamed through a
+    ``SessionStoreWriter``: sessions/s and the peak chunk size actually held
+    (the memory-bounded guarantee: peak rows in flight is O(chunk + shard),
+    independent of the log size).
+  * **stream** — one full epoch through ``StreamingClickLogLoader``
+    (shuffled, with and without the background read-ahead thread) vs one
+    epoch through the in-memory ``ClickLogLoader`` on the same data:
+    sessions/s of pure host-side batch production.
+
+Writes BENCH_store.json next to this file (or --out) so the input-pipeline
+throughput trajectory is recorded per PR.
+
+Run: PYTHONPATH=src python benchmarks/bench_store.py [--sessions 200000]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+# Allow running without PYTHONPATH=src.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.data import (ClickLogLoader, SessionStore, SessionStoreWriter,  # noqa: E402
+                        StreamingClickLogLoader, SyntheticConfig,
+                        iter_click_log_chunks)
+
+
+def bench_ingest(cfg, store_dir, chunk_sessions, shard_rows):
+    peak_chunk_rows = 0
+    t0 = time.perf_counter()
+    with SessionStoreWriter(store_dir, shard_rows=shard_rows,
+                            metadata={"bench": True}) as writer:
+        for chunk in iter_click_log_chunks(cfg, chunk_sessions):
+            peak_chunk_rows = max(peak_chunk_rows, chunk["clicks"].shape[0])
+            writer.append(chunk)
+    seconds = time.perf_counter() - t0
+    assert peak_chunk_rows * 10 < max(cfg.n_sessions, 10), (
+        f"peak chunk {peak_chunk_rows} rows is not < 1/10 of "
+        f"{cfg.n_sessions} — not an out-of-core ingest")
+    store = SessionStore(store_dir)
+    assert store.rows == cfg.n_sessions
+    return {
+        "seconds": seconds,
+        "sessions_per_s": cfg.n_sessions / seconds,
+        "peak_chunk_rows": peak_chunk_rows,
+        "shards": store.n_shards,
+        "bytes": sum(
+            os.path.getsize(os.path.join(dp, f))
+            for dp, _, fs in os.walk(store_dir) for f in fs),
+    }, store
+
+
+def drain(loader):
+    """One epoch of host-side batch production; returns (batches, seconds)."""
+    t0 = time.perf_counter()
+    n = 0
+    for batch in iter(loader):
+        # touch one column so lazily-mapped pages are actually read
+        batch["clicks"].sum()
+        n += 1
+    return n, time.perf_counter() - t0
+
+
+def best_of(make_loader, reps):
+    best = float("inf")
+    batches = 0
+    for _ in range(reps):
+        n, sec = drain(make_loader())
+        batches, best = n, min(best, sec)
+    return batches, best
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sessions", type=int, default=200_000)
+    ap.add_argument("--chunk", type=int, default=None,
+                    help="ingest chunk sessions (default sessions/20)")
+    ap.add_argument("--shard-rows", type=int, default=None,
+                    help="rows per shard (default sessions/8)")
+    ap.add_argument("--batch", type=int, default=4096)
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--out", default=os.path.join(os.path.dirname(__file__),
+                                                  "BENCH_store.json"))
+    args = ap.parse_args()
+
+    chunk = args.chunk or max(args.sessions // 20, 1)
+    shard_rows = args.shard_rows or max(args.sessions // 8, 1)
+    cfg = SyntheticConfig(n_sessions=args.sessions,
+                          n_queries=max(args.sessions // 200, 10),
+                          docs_per_query=20, positions=10, behavior="dbn",
+                          seed=0)
+
+    tmp = tempfile.mkdtemp(prefix="bench_store_")
+    try:
+        store_dir = os.path.join(tmp, "store")
+        ingest, store = bench_ingest(cfg, store_dir, chunk, shard_rows)
+        print(f"[ingest] {args.sessions} sessions in {ingest['seconds']:.2f}s "
+              f"({ingest['sessions_per_s']:.0f}/s), peak chunk "
+              f"{ingest['peak_chunk_rows']} rows, {ingest['shards']} shards, "
+              f"{ingest['bytes'] / 1e6:.1f} MB")
+
+        data = store.read_all(columns=("positions", "query_doc_ids", "clicks",
+                                       "mask"))
+        variants = {
+            "in_memory": lambda: ClickLogLoader(
+                data, batch_size=args.batch, seed=0),
+            "stream_read_ahead": lambda: StreamingClickLogLoader(
+                store, batch_size=args.batch, seed=0, read_ahead=2),
+            "stream_sync": lambda: StreamingClickLogLoader(
+                store, batch_size=args.batch, seed=0, read_ahead=0),
+        }
+        stream = {}
+        for name, make in variants.items():
+            batches, sec = best_of(make, args.reps)
+            stream[name] = {"seconds": sec,
+                            "sessions_per_s": batches * args.batch / sec,
+                            "batches": batches}
+            print(f"[stream] {name:18s} {sec:.2f}s "
+                  f"({stream[name]['sessions_per_s']:.0f} sessions/s)")
+
+        result = {
+            "sessions": args.sessions,
+            "chunk_sessions": chunk,
+            "shard_rows": shard_rows,
+            "batch": args.batch,
+            "ingest": ingest,
+            "stream": stream,
+            "stream_vs_memory": (stream["stream_read_ahead"]["sessions_per_s"]
+                                 / stream["in_memory"]["sessions_per_s"]),
+        }
+        with open(args.out, "w") as f:
+            json.dump(result, f, indent=1)
+        print(f"[bench_store] wrote {args.out} (stream/in-memory throughput "
+              f"ratio {result['stream_vs_memory']:.2f}x)")
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

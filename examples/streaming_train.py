@@ -1,0 +1,54 @@
+"""Streaming quickstart — train from an on-disk session store.
+
+The log is synthesized chunk-by-chunk straight into a sharded columnar
+store (never held in RAM), then a ``StreamingClickLogLoader`` feeds the
+Trainer through memory-mapped shard windows. Same Trainer, same models,
+same checkpoint/resume semantics as the in-memory quickstart — only the
+data layer changed, which is the point: swap ``ClickLogLoader(dict)`` for
+``StreamingClickLogLoader(store)`` and the log no longer has to fit in
+memory.
+
+    PYTHONPATH=src python examples/streaming_train.py
+"""
+import os
+import tempfile
+
+from repro import optim
+from repro.core import UserBrowsingModel
+from repro.data import StreamingClickLogLoader, SyntheticConfig, ingest_synthetic
+from repro.train import Trainer
+
+workdir = tempfile.mkdtemp(prefix="clax_store_")
+
+# 1. Ingest: stream the synthetic log into train/val/test stores. Peak data
+#    memory is O(chunk_sessions + shard_rows) rows — the 30k here could be
+#    100M and this step would still fit in the same RAM budget.
+cfg = SyntheticConfig(n_sessions=30_000, n_queries=200, docs_per_query=15,
+                      positions=10, behavior="ubm", seed=0)
+stores = ingest_synthetic(cfg, workdir, chunk_sessions=2_000, shard_rows=5_000,
+                          splits={"train": 0.8, "val": 0.1, "test": 0.1})
+print("ingested:", {name: f"{s.rows} rows / {s.n_shards} shards"
+                    for name, s in stores.items()})
+
+# 2. Model + trainer, exactly as in examples/quickstart.py.
+model = UserBrowsingModel(query_doc_pairs=cfg.n_query_doc_pairs,
+                          positions=10, init_prob=1 / 9)
+trainer = Trainer(optimizer=optim.adamw(0.003, weight_decay=1e-4),
+                  epochs=50, patience=1)
+
+# 3. Train + test from disk. The loader shuffles shard order and in-shard
+#    windows per epoch, reads ahead on a background thread, and its
+#    (epoch, shard, step) cursor checkpoints bit-exactly with the trainer.
+history = trainer.train(
+    model,
+    StreamingClickLogLoader(stores["train"], batch_size=2048, seed=0),
+    StreamingClickLogLoader(stores["val"], batch_size=8192, shuffle=False,
+                            drop_last=False))
+results = trainer.test(model, StreamingClickLogLoader(
+    stores["test"], batch_size=8192, shuffle=False, drop_last=False))
+print("\ntest metrics:")
+for k, v in results.items():
+    if k != "per_rank":
+        print(f"  {k}: {v:.4f}")
+print("  per-rank ppl:", [round(x, 3) for x in results["per_rank"]["ppl"]])
+print("store kept at:", workdir, "(delete freely)")

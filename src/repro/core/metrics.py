@@ -132,7 +132,6 @@ def _rank_by_score(scores, where):
     """Ranks (1-based) of each item when sorted by descending score."""
     scores = jnp.where(where, scores, -jnp.inf)
     order = jnp.argsort(-scores, axis=-1)
-    ranks = jnp.empty_like(order)
     ranks = jnp.take_along_axis(
         jnp.broadcast_to(jnp.arange(1, scores.shape[-1] + 1), scores.shape),
         jnp.argsort(order, axis=-1), axis=-1)

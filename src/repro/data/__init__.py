@@ -1,12 +1,24 @@
-"""Data pipeline: synthetic click-log simulation + sharded, resumable loading."""
-from repro.data.synthetic import SyntheticConfig, generate_click_log, make_features
+"""Data pipeline: synthetic click-log simulation, out-of-core session store,
+and sharded, resumable in-memory + streaming loading."""
 from repro.data.loader import ClickLogLoader, DevicePrefetcher, split_sessions
+from repro.data.store import (SessionStore, SessionStoreWriter, ingest_synthetic,
+                              write_session_store)
+from repro.data.streaming import StreamingClickLogLoader, StreamingLoaderState
+from repro.data.synthetic import (SyntheticConfig, generate_click_log,
+                                  iter_click_log_chunks, make_features)
 
 __all__ = [
     "SyntheticConfig",
     "generate_click_log",
+    "iter_click_log_chunks",
     "make_features",
     "ClickLogLoader",
     "DevicePrefetcher",
     "split_sessions",
+    "SessionStore",
+    "SessionStoreWriter",
+    "write_session_store",
+    "ingest_synthetic",
+    "StreamingClickLogLoader",
+    "StreamingLoaderState",
 ]

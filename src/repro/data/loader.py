@@ -20,13 +20,22 @@ MODEL_KEYS = ("positions", "query_doc_ids", "clicks", "mask",
 
 def split_sessions(data: Dict[str, np.ndarray], fractions=(0.8, 0.1, 0.1),
                    seed: int = 0):
-    """Shuffle-split a session dict into train/val/test dicts."""
+    """Shuffle-split a session dict into train/val/test dicts.
+
+    The last split takes the exact remainder (independent per-fraction
+    rounding could overlap splits or silently drop tail sessions); the
+    splits always partition the input.
+    """
     n = data["positions"].shape[0]
     order = np.random.default_rng(seed).permutation(n)
+    sizes = [int(round(n * frac)) for frac in fractions[:-1]]
+    sizes.append(n - sum(sizes))
+    if sizes[-1] < 0:
+        raise ValueError(f"fractions {fractions} overflow {n} sessions")
+    assert sum(sizes) == n, (sizes, n)
     out = []
     start = 0
-    for frac in fractions:
-        size = int(round(n * frac))
+    for size in sizes:
         idx = order[start:start + size]
         out.append({k: v[idx] for k, v in data.items()})
         start += size

@@ -1,0 +1,278 @@
+"""Streaming loader over an on-disk :class:`repro.data.store.SessionStore`.
+
+Trains on click logs far larger than host RAM with the same contract as the
+in-memory ``ClickLogLoader``: deterministic shuffling, bit-exact mid-epoch
+checkpoint/resume, host sharding for multi-host data parallelism, and an
+iterator of numpy batch dicts that plugs straight into ``DevicePrefetcher``.
+
+How the epoch stream is defined (all deterministic in ``(seed, epoch)``):
+
+1. **Shard order** — the host's assigned shards (``shard_id % host_count ==
+   host_id``: placement at shard granularity, no row-level coordination)
+   are permuted by ``rng((seed, epoch, 0))``.
+2. **In-shard order** — each shard's rows are permuted by
+   ``rng((seed, epoch, 1 + shard_id))``. Row payloads are read only
+   ``window_rows`` of that permutation at a time (default: one whole
+   shard), so peak reader memory is O(window * (1 + read_ahead)) row
+   payloads plus one O(shard_rows) index permutation (8 bytes/row, small
+   next to the rows it orders) — never O(log).
+3. **Batching** — batches of ``batch_size`` are cut sequentially from the
+   concatenated stream, spanning shard boundaries; ``drop_last`` matches
+   ``ClickLogLoader``.
+
+A **single-shard** store (one host) uses in-shard seed ``(seed, epoch)`` —
+exactly ``ClickLogLoader._epoch_order`` — so the streaming loader is a
+drop-in replacement that reproduces the in-memory loader's batch stream
+bit-for-bit (tested in tests/test_store.py). With ``shuffle=False`` the
+stream is the store's row order for any shard count.
+
+The cursor ``(epoch, shard, step)`` checkpoints like ``LoaderState``:
+``step * batch_size`` locates the resume row inside the deterministic epoch
+stream by pure arithmetic over the manifest's per-shard row counts, so
+resume skips already-consumed shards without reading them.
+
+A background read-ahead thread stages upcoming permuted windows into a
+bounded queue so disk reads overlap compute; the consuming iterator (and
+``DevicePrefetcher`` above it) sees plain numpy batches either way.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.data.loader import MODEL_KEYS
+from repro.data.store import SessionStore, _take_rows
+
+
+@dataclasses.dataclass
+class StreamingLoaderState:
+    """Resumable cursor. ``epoch``/``step`` are authoritative (``step`` is the
+    batch index within the epoch, as in ``LoaderState``); ``shard`` records
+    the epoch-order position of the shard the last batch was drawn from
+    (derived — kept for observability and log messages)."""
+    epoch: int = 0
+    step: int = 0
+    shard: int = 0
+
+    def to_dict(self):
+        return {"epoch": self.epoch, "step": self.step, "shard": self.shard}
+
+    @classmethod
+    def from_dict(cls, d):
+        return cls(epoch=int(d["epoch"]), step=int(d["step"]),
+                   shard=int(d.get("shard", 0)))
+
+
+class _WorkerError:
+    def __init__(self, error: BaseException):
+        self.error = error
+
+
+_DONE = object()
+
+
+class StreamingClickLogLoader:
+    """Deterministic, checkpointable, out-of-core batch loader.
+
+    Same surface as ``ClickLogLoader`` (``__iter__`` runs one epoch,
+    ``epochs(n)``, ``batches_per_epoch``, ``state_dict``/``load_state_dict``)
+    but backed by a :class:`SessionStore` instead of an in-memory dict.
+    """
+
+    def __init__(self, store, batch_size: int, shuffle: bool = True,
+                 seed: int = 0, drop_last: bool = True,
+                 host_id: int = 0, host_count: int = 1,
+                 include_keys: Optional[Tuple[str, ...]] = None,
+                 window_rows: Optional[int] = None, read_ahead: int = 2):
+        self.store = store if isinstance(store, SessionStore) else SessionStore(store)
+        if host_count > 1 and self.store.n_shards < host_count:
+            raise ValueError(
+                f"store has {self.store.n_shards} shards but host_count="
+                f"{host_count}: sharding is at shard granularity — re-ingest "
+                "with smaller shard_rows")
+        if host_count > 1 and not drop_last:
+            raise ValueError(
+                "drop_last=False with host_count > 1 would give hosts "
+                "different final-batch shapes; multi-host training requires "
+                "drop_last=True")
+        self.keys = tuple(include_keys or
+                          (k for k in self.store.columns if k in MODEL_KEYS))
+        missing = [k for k in self.keys if k not in self.store.columns]
+        if missing:
+            raise KeyError(f"store lacks columns {missing}")
+        self.batch_size = int(batch_size)
+        self.shuffle = shuffle
+        self.seed = seed
+        self.drop_last = drop_last
+        self.host_id, self.host_count = host_id, host_count
+        self.shard_ids = list(range(host_id, self.store.n_shards, host_count))
+        self.n = sum(self.store.shard_rows(i) for i in self.shard_ids)
+        # Shard-granular placement gives hosts unequal row counts; every host
+        # must still run the same number of steps per epoch or collectives
+        # desync (ClickLogLoader equalizes via n // host_count). Cap the
+        # epoch at the smallest host's rows — pure manifest arithmetic.
+        self._epoch_rows = min(
+            sum(self.store.shard_rows(i)
+                for i in range(h, self.store.n_shards, host_count))
+            for h in range(host_count))
+        if window_rows is not None and window_rows < 1:
+            raise ValueError(f"window_rows must be >= 1, got {window_rows}")
+        self.window_rows = window_rows
+        self.read_ahead = int(read_ahead)
+        # One shard spanning the whole loader degenerates to the in-memory
+        # loader's order: in-shard seed (seed, epoch) == ClickLogLoader.
+        self._single_shard = (self.store.n_shards == 1 and host_count == 1)
+        self.state = StreamingLoaderState()
+
+    # -- epoch geometry (pure arithmetic, no IO) -------------------------------
+    @property
+    def batches_per_epoch(self) -> int:
+        """Identical on every host (computed from the smallest host's rows)."""
+        if self.drop_last:
+            return self._epoch_rows // self.batch_size
+        return -(-self._epoch_rows // self.batch_size)
+
+    def _shard_order(self, epoch: int) -> List[int]:
+        if not self.shuffle or len(self.shard_ids) <= 1:
+            return list(self.shard_ids)
+        perm = np.random.default_rng((self.seed, epoch, 0)).permutation(
+            len(self.shard_ids))
+        return [self.shard_ids[i] for i in perm]
+
+    def _inshard_order(self, epoch: int, shard_id: int) -> np.ndarray:
+        rows = self.store.shard_rows(shard_id)
+        if not self.shuffle:
+            return np.arange(rows)
+        key = (self.seed, epoch) if self._single_shard else \
+            (self.seed, epoch, 1 + shard_id)
+        return np.random.default_rng(key).permutation(rows)
+
+    def _epoch_plan(self, epoch: int) -> List[Tuple[int, int, int, int]]:
+        """(shard_pos, shard_id, start, stop) windows in stream order."""
+        plan = []
+        for pos, sid in enumerate(self._shard_order(epoch)):
+            rows = self.store.shard_rows(sid)
+            w = self.window_rows or rows
+            for start in range(0, rows, w):
+                plan.append((pos, sid, start, min(start + w, rows)))
+        return plan
+
+    # -- reading ---------------------------------------------------------------
+    def _read_plan(self, epoch: int,
+                   entries: Sequence[Tuple[Tuple[int, int, int, int], int]]
+                   ) -> Iterator[Tuple[int, Dict[str, np.ndarray]]]:
+        """Materialize plan windows in order; ``entries`` pairs each plan
+        entry with how many leading rows to drop (resume skip)."""
+        cached_sid, cols, perm = None, None, None
+        for (pos, sid, start, stop), drop in entries:
+            if sid != cached_sid:
+                cols = self.store.open_shard(sid, columns=self.keys)
+                perm = self._inshard_order(epoch, sid)
+                cached_sid = sid
+            rows = perm[start + drop:stop]
+            if rows.size == 0:
+                continue
+            yield pos, {k: np.asarray(v[rows]) for k, v in cols.items()}
+
+    def _block_stream(self, epoch, entries):
+        """``_read_plan`` behind a bounded background read-ahead thread."""
+        if self.read_ahead <= 0:
+            yield from self._read_plan(epoch, entries)
+            return
+        q: queue.Queue = queue.Queue(maxsize=self.read_ahead)
+        stop = threading.Event()
+
+        def put(item) -> bool:
+            while not stop.is_set():
+                try:
+                    q.put(item, timeout=0.1)
+                    return True
+                except queue.Full:
+                    continue
+            return False
+
+        def worker():
+            try:
+                for item in self._read_plan(epoch, entries):
+                    if not put(item):
+                        return
+                put(_DONE)
+            except BaseException as e:  # surfaced on the consumer side
+                put(_WorkerError(e))
+
+        thread = threading.Thread(target=worker, daemon=True,
+                                  name="store-read-ahead")
+        thread.start()
+        try:
+            while True:
+                item = q.get()
+                if item is _DONE:
+                    return
+                if isinstance(item, _WorkerError):
+                    raise item.error
+                yield item
+        finally:
+            stop.set()
+
+    # -- iteration -------------------------------------------------------------
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        """One epoch per call, resuming from ``self.state`` (as in
+        ``ClickLogLoader``); advances the cursor as batches are consumed."""
+        epoch = self.state.epoch
+        nb = self.batches_per_epoch
+        if self.state.step < nb:
+            # Resume arithmetic: skip whole windows that precede the cursor
+            # row, and drop windows past the epoch's step cap (a host with
+            # surplus rows — shard-granular placement — must neither read
+            # nor buffer them). Pure arithmetic, no IO.
+            skip = self.state.step * self.batch_size
+            need = nb * self.batch_size if self.drop_last else self.n
+            entries, cum = [], 0
+            for entry in self._epoch_plan(epoch):
+                rows = entry[3] - entry[2]
+                if cum + rows <= skip:
+                    cum += rows
+                    continue
+                if cum >= need:
+                    break
+                entries.append((entry, max(skip - cum, 0)))
+                cum += rows
+            parts: List[Dict[str, np.ndarray]] = []
+            buffered = 0
+            blocks = self._block_stream(epoch, entries)
+            try:
+                for shard_pos, block in blocks:
+                    parts.append(block)
+                    buffered += next(iter(block.values())).shape[0]
+                    while buffered >= self.batch_size and self.state.step < nb:
+                        batch = _take_rows(parts, self.batch_size)
+                        buffered -= self.batch_size
+                        self.state.step += 1
+                        self.state.shard = shard_pos
+                        yield batch
+                    if self.state.step >= nb:
+                        break  # epoch cap reached; don't read surplus windows
+                if (not self.drop_last and buffered > 0
+                        and self.state.step < nb):
+                    batch = _take_rows(parts, buffered)
+                    self.state.step += 1
+                    yield batch
+            finally:
+                blocks.close()  # stops the read-ahead thread
+        self.state = StreamingLoaderState(epoch=epoch + 1, step=0, shard=0)
+
+    def epochs(self, n_epochs: int):
+        start = self.state.epoch
+        while self.state.epoch < start + n_epochs:
+            yield from iter(self)
+
+    # -- checkpointing ---------------------------------------------------------
+    def state_dict(self):
+        return self.state.to_dict()
+
+    def load_state_dict(self, d):
+        self.state = StreamingLoaderState.from_dict(d)

@@ -91,19 +91,23 @@ def _sample_clicks(cfg: SyntheticConfig, behavior: str, gamma_s, theta, sigma_s,
     raise ValueError(f"unknown behavior {behavior!r}")
 
 
-def generate_click_log(cfg: SyntheticConfig) -> Dict[str, np.ndarray]:
-    rng = np.random.default_rng(cfg.seed)
-    gamma, theta, sigma = _ground_truth(cfg, rng)
-
+def _query_probs(cfg: SyntheticConfig) -> np.ndarray:
     # Zipf query sampling (bounded), long tail like WSCD.
     ranks = np.arange(1, cfg.n_queries + 1, dtype=np.float64)
     q_probs = ranks ** (-cfg.zipf_exponent)
-    q_probs /= q_probs.sum()
-    queries = rng.choice(cfg.n_queries, size=cfg.n_sessions, p=q_probs)
+    return q_probs / q_probs.sum()
+
+
+def _generate_sessions(cfg: SyntheticConfig, n_sessions: int,
+                       gamma: np.ndarray, theta: np.ndarray, sigma: np.ndarray,
+                       q_probs: np.ndarray,
+                       rng: np.random.Generator) -> Dict[str, np.ndarray]:
+    """Sample ``n_sessions`` sessions against fixed ground-truth parameters."""
+    queries = rng.choice(cfg.n_queries, size=n_sessions, p=q_probs)
 
     # Logging ranker: order docs by noisy attractiveness (selection bias),
     # show top-K.
-    S, K = cfg.n_sessions, cfg.positions
+    S, K = n_sessions, cfg.positions
     noise = rng.gumbel(scale=cfg.ranker_noise,
                        size=(S, cfg.docs_per_query)).astype(np.float32)
     scores = np.log(np.maximum(gamma[queries], 1e-6)) + noise
@@ -136,6 +140,14 @@ def generate_click_log(cfg: SyntheticConfig) -> Dict[str, np.ndarray]:
     if cfg.n_features > 0:
         data["query_doc_features"] = make_features(
             gamma_s, cfg.n_features, cfg.feature_noise, rng)
+    return data
+
+
+def generate_click_log(cfg: SyntheticConfig) -> Dict[str, np.ndarray]:
+    rng = np.random.default_rng(cfg.seed)
+    gamma, theta, sigma = _ground_truth(cfg, rng)
+    data = _generate_sessions(cfg, cfg.n_sessions, gamma, theta, sigma,
+                              _query_probs(cfg), rng)
     meta = {
         "theta": theta,
         "gamma": gamma.reshape(-1),
@@ -143,6 +155,38 @@ def generate_click_log(cfg: SyntheticConfig) -> Dict[str, np.ndarray]:
         "n_query_doc_pairs": cfg.n_query_doc_pairs,
     }
     return data, meta
+
+
+def iter_click_log_chunks(cfg: SyntheticConfig, chunk_sessions: int):
+    """Generator-mode synthesis: yield the log in bounded-memory chunks.
+
+    Ground-truth parameters (attractiveness/satisfaction tables, position
+    bias) are drawn once from ``cfg.seed`` — bit-identical to the tables
+    behind :func:`generate_click_log` — and held while sessions stream out
+    in chunks of ``chunk_sessions`` rows (last chunk partial). Each chunk
+    uses an independent generator seeded ``(cfg.seed, chunk_index)``, so the
+    stream is deterministic in ``(cfg, chunk_sessions)`` and chunks can in
+    principle be produced in parallel. Peak memory is O(chunk_sessions)
+    rows regardless of ``cfg.n_sessions``; feeding the chunks into a
+    :class:`repro.data.store.SessionStoreWriter` synthesizes a 100M+ session
+    log without ever materializing it.
+
+    Note: the concatenated chunk stream is statistically identical to — but
+    not a bit-exact replay of — the monolithic ``generate_click_log`` draw
+    for the same seed (the session-level rng consumption order differs).
+    """
+    if chunk_sessions < 1:
+        raise ValueError(f"chunk_sessions must be >= 1, got {chunk_sessions}")
+    gamma, theta, sigma = _ground_truth(cfg, np.random.default_rng(cfg.seed))
+    q_probs = _query_probs(cfg)
+    emitted = 0
+    chunk_index = 0
+    while emitted < cfg.n_sessions:
+        n = min(chunk_sessions, cfg.n_sessions - emitted)
+        rng = np.random.default_rng((cfg.seed, chunk_index))
+        yield _generate_sessions(cfg, n, gamma, theta, sigma, q_probs, rng)
+        emitted += n
+        chunk_index += 1
 
 
 def make_features(gamma_s: np.ndarray, n_features: int, noise: float,

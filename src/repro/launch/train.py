@@ -1,22 +1,91 @@
 """Production training launcher for CLAX click models.
 
+In-memory path (log must fit in host RAM):
+
     PYTHONPATH=src python -m repro.launch.train --model ubm \
         [--sessions 200000] [--epochs 20] [--ckpt-dir ckpts/ubm] \
         [--compression hash --ratio 10] [--host-id 0 --host-count 1]
 
+Out-of-core path — ingest once into a sharded on-disk session store, then
+stream batches from it (peak data memory is O(chunk + shard), so the log can
+be far larger than RAM):
+
+    PYTHONPATH=src python -m repro.launch.train --model ubm \
+        --store-dir /data/clicklog --ingest --sessions 100000000 \
+        [--chunk-sessions 1000000] [--shard-rows 1000000]
+
+A directory that already holds ingested ``train/val/test`` stores is reused
+when ``--ingest`` is omitted; the model is sized from the ``SyntheticConfig``
+recorded in the store manifest, so train-from-store needs no generation
+flags at all.
+
 Single-host here; at pod scale the same entry point runs per host with
---host-id/--host-count carving the data shard (repro/data/loader.py) and
-jax.distributed initializing the mesh — the dry-run (repro/launch/dryrun.py)
-proves the sharded program compiles for the production meshes.
+--host-id/--host-count carving the data shard (rows of the in-memory dict,
+or whole store shards for the streaming path) and jax.distributed
+initializing the mesh — the dry-run (repro/launch/dryrun.py) proves the
+sharded program compiles for the production meshes.
 """
 from __future__ import annotations
 
 import argparse
+import os
 
 from repro import optim
 from repro.core import (Compression, EmbeddingParameterConfig, MODEL_REGISTRY)
-from repro.data import ClickLogLoader, SyntheticConfig, generate_click_log, split_sessions
+from repro.data import (ClickLogLoader, SessionStore, StreamingClickLogLoader,
+                        SyntheticConfig, generate_click_log, ingest_synthetic,
+                        split_sessions)
 from repro.train import Trainer
+
+
+def _synthetic_config(args) -> SyntheticConfig:
+    return SyntheticConfig(n_sessions=args.sessions,
+                           n_queries=max(args.sessions // 100, 1),
+                           docs_per_query=20, positions=10, behavior="dbn",
+                           seed=args.seed)
+
+
+def make_loaders(args):
+    """Returns (train_loader, val_loader, test_loader, data_cfg) where
+    data_cfg is the SyntheticConfig describing the data (for the store path,
+    reconstructed from the manifest metadata, so models are sized against
+    what was actually ingested)."""
+    if args.store_dir:
+        if args.ingest:
+            cfg = _synthetic_config(args)
+            chunk = args.chunk_sessions or max(args.sessions // 20, 1)
+            print(f"[train] ingesting {cfg.n_sessions} sessions into "
+                  f"{args.store_dir} (chunk={chunk}, shard_rows={args.shard_rows})")
+            ingest_synthetic(cfg, args.store_dir, chunk_sessions=chunk,
+                             shard_rows=args.shard_rows,
+                             splits={"train": 0.8, "val": 0.1, "test": 0.1})
+        train_store = SessionStore(os.path.join(args.store_dir, "train"))
+        syn = train_store.metadata.get("synthetic_config")
+        if syn is None:
+            raise SystemExit(
+                f"{args.store_dir}/train has no synthetic_config metadata — "
+                "was it ingested with --ingest / ingest_synthetic?")
+        data_cfg = SyntheticConfig(**syn)
+        train = StreamingClickLogLoader(train_store, batch_size=args.batch,
+                                        seed=args.seed, host_id=args.host_id,
+                                        host_count=args.host_count,
+                                        window_rows=args.window_rows)
+        val = StreamingClickLogLoader(os.path.join(args.store_dir, "val"),
+                                      batch_size=8192, shuffle=False,
+                                      drop_last=False)
+        test = StreamingClickLogLoader(os.path.join(args.store_dir, "test"),
+                                       batch_size=8192, shuffle=False,
+                                       drop_last=False)
+        return train, val, test, data_cfg
+
+    cfg = _synthetic_config(args)
+    data, _ = generate_click_log(cfg)
+    train, val, test = split_sessions(data, (0.8, 0.1, 0.1), seed=args.seed)
+    return (ClickLogLoader(train, batch_size=args.batch, seed=args.seed,
+                           host_id=args.host_id, host_count=args.host_count),
+            ClickLogLoader(val, batch_size=8192, shuffle=False, drop_last=False),
+            ClickLogLoader(test, batch_size=8192, shuffle=False, drop_last=False),
+            cfg)
 
 
 def main():
@@ -33,21 +102,33 @@ def main():
     ap.add_argument("--host-id", type=int, default=0)
     ap.add_argument("--host-count", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--store-dir", default=None,
+                    help="session-store directory; train via the streaming "
+                         "out-of-core loader instead of in-memory arrays")
+    ap.add_argument("--ingest", action="store_true",
+                    help="synthesize --sessions sessions chunk-by-chunk into "
+                         "--store-dir/{train,val,test} before training")
+    ap.add_argument("--chunk-sessions", type=int, default=None,
+                    help="ingest chunk size in sessions (default: sessions/20)")
+    ap.add_argument("--shard-rows", type=int, default=1_000_000,
+                    help="rows per store shard (unit of shuffle/host placement)")
+    ap.add_argument("--window-rows", type=int, default=None,
+                    help="streaming read window within a shard (default: full "
+                         "shard)")
     args = ap.parse_args()
+    if args.ingest and not args.store_dir:
+        ap.error("--ingest requires --store-dir")
 
-    cfg = SyntheticConfig(n_sessions=args.sessions, n_queries=args.sessions // 100,
-                          docs_per_query=20, positions=10, behavior="dbn",
-                          seed=args.seed)
-    data, _ = generate_click_log(cfg)
-    train, val, test = split_sessions(data, (0.8, 0.1, 0.1), seed=args.seed)
+    train_loader, val_loader, test_loader, data_cfg = make_loaders(args)
 
     attraction = EmbeddingParameterConfig(
-        parameters=cfg.n_query_doc_pairs,
+        parameters=data_cfg.n_query_doc_pairs,
         compression=Compression(args.compression),
         compression_ratio=args.ratio,
         baseline_correction=True, init_logit=-2.0)
     model = MODEL_REGISTRY[args.model](
-        query_doc_pairs=cfg.n_query_doc_pairs, positions=10,
+        query_doc_pairs=data_cfg.n_query_doc_pairs,
+        positions=data_cfg.positions,
         attraction=attraction)
 
     trainer = Trainer(optimizer=optim.adamw(args.lr, weight_decay=1e-4),
@@ -55,14 +136,8 @@ def main():
                       checkpoint_dir=args.ckpt_dir,
                       checkpoint_every_steps=200 if args.ckpt_dir else None,
                       handle_preemption=True)
-    loader = ClickLogLoader(train, batch_size=args.batch, seed=args.seed,
-                            host_id=args.host_id, host_count=args.host_count)
-    trainer.train(model, loader,
-                  ClickLogLoader(val, batch_size=8192, shuffle=False,
-                                 drop_last=False),
-                  resume=bool(args.ckpt_dir))
-    results = trainer.test(model, ClickLogLoader(test, batch_size=8192, shuffle=False,
-                                                 drop_last=False))
+    trainer.train(model, train_loader, val_loader, resume=bool(args.ckpt_dir))
+    results = trainer.test(model, test_loader)
     print("[train] test:", {k: round(v, 4) for k, v in results.items()
                             if k != "per_rank"})
 

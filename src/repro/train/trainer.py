@@ -96,7 +96,9 @@ class Trainer:
             state = TrainState(params=tree["params"], opt_state=tree["opt_state"],
                                epoch=int(aux["epoch"]),
                                global_step=int(aux["global_step"]))
-            train_loader.load_state_dict(aux["loader"])
+            if aux.get("loader") is not None and hasattr(train_loader,
+                                                         "load_state_dict"):
+                train_loader.load_state_dict(aux["loader"])
             self.log_fn(f"[trainer] resumed at epoch={state.epoch} "
                         f"step={state.global_step}")
 
@@ -175,7 +177,10 @@ class Trainer:
 
     # -- internals -------------------------------------------------------------------
     def _save(self, state: TrainState, loader, loader_state=None):
+        if loader_state is None:
+            get_state = getattr(loader, "state_dict", lambda: None)
+            loader_state = get_state()
         self.ckpt.save(state.global_step,
                        {"params": state.params, "opt_state": state.opt_state},
                        aux={"epoch": state.epoch, "global_step": state.global_step,
-                            "loader": loader_state or loader.state_dict()})
+                            "loader": loader_state})

@@ -118,3 +118,43 @@ def test_rax_metric_adapter():
                      labels=jnp.asarray([[2, 1, 0]]),
                      where=jnp.ones((1, 3), bool))
     np.testing.assert_allclose(float(m.compute(state)), 1.0, rtol=1e-6)
+
+
+def test_tied_scores_rank_stably_in_index_order():
+    """argsort is stable, so tied scores must rank by original index."""
+    from repro.core.metrics import _rank_by_score
+
+    scores = jnp.asarray([[0.5, 0.5, 0.5, 0.5]])
+    where = jnp.ones((1, 4), bool)
+    np.testing.assert_array_equal(np.asarray(_rank_by_score(scores, where)),
+                                  [[1, 2, 3, 4]])
+    # partial tie: items 1 and 2 tied; item 1 (earlier index) ranks first
+    scores = jnp.asarray([[0.9, 0.4, 0.4, 0.1]])
+    np.testing.assert_array_equal(np.asarray(_rank_by_score(scores, where)),
+                                  [[1, 2, 3, 4]])
+
+
+def test_dcg_with_tied_scores_matches_stable_order():
+    # items 0/1 tied at 0.7 -> stable order keeps (0, 1); hand-compute on that
+    scores = jnp.asarray([[0.7, 0.7, 0.1]])
+    labels = jnp.asarray([[1, 2, 0]])
+    want = (2**1 - 1) / np.log2(2) + (2**2 - 1) / np.log2(3) + 0.0
+    np.testing.assert_allclose(float(dcg_metric(scores, labels)), want,
+                               rtol=1e-6)
+
+
+def test_mrr_with_tied_scores_uses_first_relevant_index():
+    scores = jnp.asarray([[0.5, 0.5, 0.5]])
+    labels = jnp.asarray([[0, 1, 1]])
+    # all tied -> ranks are index order -> first relevant is rank 2
+    np.testing.assert_allclose(float(mrr_metric(scores, labels)), 1 / 2,
+                               rtol=1e-6)
+
+
+def test_ndcg_all_tied_scores_is_deterministic_and_bounded():
+    scores = jnp.zeros((1, 4))
+    labels = jnp.asarray([[0, 2, 1, 0]])
+    got = float(ndcg_metric(scores, labels))
+    again = float(ndcg_metric(scores, labels))
+    assert got == again
+    assert 0.0 < got < 1.0  # tied uniform scores cannot be the ideal order

@@ -1,0 +1,355 @@
+"""Session store + streaming loader tests: round-trip, equivalence with the
+in-memory loader, bit-exact cursor resume, host sharding, checksums, and
+bounded-memory chunked ingestion."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.data import (ClickLogLoader, DevicePrefetcher, SessionStore,
+                        SessionStoreWriter, StreamingClickLogLoader,
+                        SyntheticConfig, generate_click_log, ingest_synthetic,
+                        iter_click_log_chunks, write_session_store)
+
+
+@pytest.fixture(scope="module")
+def log():
+    cfg = SyntheticConfig(n_sessions=1000, n_queries=25, docs_per_query=12,
+                          positions=8, behavior="dbn", seed=13)
+    data, _ = generate_click_log(cfg)
+    return cfg, data
+
+
+def batches_equal(a, b):
+    assert len(a) == len(b)
+    for x, y in zip(a, b):
+        assert set(x) == set(y)
+        for k in x:
+            np.testing.assert_array_equal(np.asarray(x[k]), np.asarray(y[k]),
+                                          err_msg=k)
+
+
+# -- format / round-trip -------------------------------------------------------
+
+def test_roundtrip_bit_exact(tmp_path, log):
+    _, data = log
+    store = write_session_store(data, str(tmp_path / "s"), shard_rows=128)
+    assert store.rows == 1000 and store.n_shards == 8
+    back = store.read_all()
+    assert set(back) == set(data)
+    for k in data:
+        assert back[k].dtype == data[k].dtype
+        np.testing.assert_array_equal(back[k], data[k], err_msg=k)
+
+
+def test_chunked_append_equals_single_append(tmp_path, log):
+    _, data = log
+    one = write_session_store(data, str(tmp_path / "one"), shard_rows=300)
+    with SessionStoreWriter(str(tmp_path / "many"), shard_rows=300) as w:
+        for lo in range(0, 1000, 170):  # chunk size coprime-ish with shard
+            w.append({k: v[lo:lo + 170] for k, v in data.items()})
+    many = SessionStore(str(tmp_path / "many"))
+    a, b = one.read_all(), many.read_all()
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k], err_msg=k)
+
+
+def test_manifest_schema_and_metadata(tmp_path, log):
+    _, data = log
+    store = write_session_store(data, str(tmp_path / "s"), shard_rows=400,
+                                metadata={"origin": "test"})
+    with open(tmp_path / "s" / "manifest.json") as f:
+        manifest = json.load(f)
+    assert manifest["rows"] == 1000
+    assert [s["rows"] for s in manifest["shards"]] == [400, 400, 200]
+    assert manifest["columns"]["clicks"]["dtype"] == "<f4"
+    assert manifest["columns"]["clicks"]["shape"] == [8]
+    assert manifest["metadata"]["origin"] == "test"
+    # memmapped shard is zero-copy read-only
+    shard = store.open_shard(0)
+    assert isinstance(shard["clicks"], np.memmap)
+    with pytest.raises(ValueError):
+        shard["clicks"][0, 0] = 1.0
+
+
+def test_checksum_detects_corruption(tmp_path, log):
+    _, data = log
+    store = write_session_store(data, str(tmp_path / "s"), shard_rows=500)
+    store.verify()
+    path = tmp_path / "s" / "shard_00001" / "clicks.bin"
+    raw = bytearray(path.read_bytes())
+    raw[0] ^= 0xFF
+    path.write_bytes(bytes(raw))
+    with pytest.raises(ValueError, match="checksum mismatch"):
+        SessionStore(str(tmp_path / "s"), verify=True)
+
+
+def test_uncommitted_directory_is_not_a_store(tmp_path, log):
+    _, data = log
+    w = SessionStoreWriter(str(tmp_path / "s"), shard_rows=100)
+    w.append(data)  # shards flushed, but no close() -> no manifest
+    with pytest.raises(FileNotFoundError):
+        SessionStore(str(tmp_path / "s"))
+
+
+def test_writer_rejects_schema_drift(tmp_path, log):
+    _, data = log
+    w = SessionStoreWriter(str(tmp_path / "s"), shard_rows=100)
+    w.append(data)
+    bad = dict(data, clicks=data["clicks"].astype(np.float64))
+    with pytest.raises(ValueError, match="dtype"):
+        w.append(bad)
+    ragged = dict(data)
+    ragged["clicks"] = data["clicks"][:10]
+    with pytest.raises(ValueError, match="ragged"):
+        w.append(ragged)
+    extra = dict(data, surprise=np.zeros((1000, 2), np.float32))
+    with pytest.raises(KeyError, match="absent from the schema"):
+        w.append(extra)
+
+
+def test_reingest_invalidates_stale_manifest(tmp_path, log):
+    """Opening a writer over a committed store must drop the old manifest,
+    so a crash mid-rewrite can't serve old metadata over new shard bytes."""
+    _, data = log
+    write_session_store(data, str(tmp_path / "s"), shard_rows=400)
+    w = SessionStoreWriter(str(tmp_path / "s"), shard_rows=300)
+    w.append(data)  # crash before close(): no manifest, not a store
+    with pytest.raises(FileNotFoundError):
+        SessionStore(str(tmp_path / "s"))
+    w.close()
+    assert SessionStore(str(tmp_path / "s")).rows == 1000
+
+
+def test_truncated_shard_file_detected_on_open(tmp_path, log):
+    _, data = log
+    store = write_session_store(data, str(tmp_path / "s"), shard_rows=500)
+    path = tmp_path / "s" / "shard_00000" / "clicks.bin"
+    path.write_bytes(path.read_bytes()[:-8])
+    with pytest.raises(ValueError, match="truncated or mismatched"):
+        store.open_shard(0)
+
+
+# -- chunked synthesis ---------------------------------------------------------
+
+def test_iter_click_log_chunks_deterministic_and_complete(log):
+    cfg, _ = log
+    chunks = list(iter_click_log_chunks(cfg, 300))
+    assert [c["clicks"].shape[0] for c in chunks] == [300, 300, 300, 100]
+    again = list(iter_click_log_chunks(cfg, 300))
+    for a, b in zip(chunks, again):
+        for k in a:
+            np.testing.assert_array_equal(a[k], b[k], err_msg=k)
+    # ground truth tables are shared with the monolithic path: session-level
+    # samples differ, but the true-attractiveness values live on the same grid
+    mono = generate_click_log(cfg)[0]
+    assert set(chunks[0]) == set(mono)
+
+
+def test_ingest_split_partitions_log(tmp_path, log):
+    cfg, _ = log
+    stores = ingest_synthetic(cfg, str(tmp_path), chunk_sessions=150,
+                              shard_rows=200,
+                              splits={"train": 0.8, "val": 0.1, "test": 0.1})
+    assert sum(s.rows for s in stores.values()) == cfg.n_sessions
+    assert stores["train"].rows > stores["val"].rows
+    assert stores["train"].metadata["synthetic_config"]["n_queries"] == cfg.n_queries
+    # deterministic: same seed re-ingests identically
+    again = ingest_synthetic(cfg, str(tmp_path / "again"), chunk_sessions=150,
+                             shard_rows=200,
+                             splits={"train": 0.8, "val": 0.1, "test": 0.1})
+    for name in stores:
+        a, b = stores[name].read_all(), again[name].read_all()
+        for k in a:
+            np.testing.assert_array_equal(a[k], b[k], err_msg=(name, k))
+
+
+# -- streaming loader ----------------------------------------------------------
+
+@pytest.mark.parametrize("shuffle", [True, False])
+@pytest.mark.parametrize("drop_last", [True, False])
+def test_single_shard_stream_equals_in_memory_loader(tmp_path, log, shuffle,
+                                                     drop_last):
+    """Acceptance: single shard + same seed => identical batch stream."""
+    _, data = log
+    store = write_session_store(data, str(tmp_path / "s"), shard_rows=10_000)
+    mem = ClickLogLoader(data, batch_size=96, shuffle=shuffle, seed=5,
+                         drop_last=drop_last)
+    stream = StreamingClickLogLoader(store, batch_size=96, shuffle=shuffle,
+                                     seed=5, drop_last=drop_last)
+    assert stream.batches_per_epoch == mem.batches_per_epoch
+    for _ in range(2):  # epochs shuffle differently but stay in lockstep
+        batches_equal(list(iter(mem)), list(iter(stream)))
+
+
+def test_multi_shard_unshuffled_stream_matches_row_order(tmp_path, log):
+    _, data = log
+    store = write_session_store(data, str(tmp_path / "s"), shard_rows=128)
+    mem = ClickLogLoader(data, batch_size=100, shuffle=False, seed=0)
+    stream = StreamingClickLogLoader(store, batch_size=100, shuffle=False,
+                                     seed=0, read_ahead=3)
+    batches_equal(list(iter(mem)), list(iter(stream)))
+
+
+@pytest.mark.parametrize("window_rows", [None, 64])
+def test_multi_shard_shuffle_covers_every_session_once(tmp_path, log,
+                                                       window_rows):
+    _, data = log
+    data = dict(data, session_uid=np.arange(1000, dtype=np.int64)[:, None]
+                * np.ones((1, 8), np.int64))
+    store = write_session_store(data, str(tmp_path / "s"), shard_rows=256)
+    stream = StreamingClickLogLoader(
+        store, batch_size=125, seed=9, window_rows=window_rows,
+        include_keys=("session_uid", "clicks"))
+    seen = np.concatenate([b["session_uid"][:, 0] for b in iter(stream)])
+    assert len(seen) == 1000
+    np.testing.assert_array_equal(np.sort(seen), np.arange(1000))
+    # different epochs produce different orders (two-level shuffle advances)
+    seen2 = np.concatenate([b["session_uid"][:, 0] for b in iter(stream)])
+    assert not np.array_equal(seen, seen2)
+    np.testing.assert_array_equal(np.sort(seen2), np.arange(1000))
+
+
+@pytest.mark.parametrize("read_ahead", [0, 2])
+@pytest.mark.parametrize("window_rows", [None, 100])
+def test_mid_epoch_cursor_resume_bit_exact(tmp_path, log, read_ahead,
+                                           window_rows):
+    """Acceptance: checkpoint/restore of (epoch, shard, step) resumes the
+    exact remaining batch stream."""
+    _, data = log
+    store = write_session_store(data, str(tmp_path / "s"), shard_rows=300)
+    mk = lambda: StreamingClickLogLoader(store, batch_size=64, seed=3,
+                                         drop_last=False,
+                                         window_rows=window_rows,
+                                         read_ahead=read_ahead)
+    full = list(iter(mk()))
+    loader = mk()
+    it = iter(loader)
+    for _ in range(7):
+        next(it)
+    cursor = loader.state_dict()
+    assert set(cursor) == {"epoch", "step", "shard"}
+    resumed = mk()
+    resumed.load_state_dict(json.loads(json.dumps(cursor)))  # survives JSON
+    batches_equal(full[7:], list(iter(resumed)))
+
+
+def test_stream_epoch_rollover_and_epochs_helper(tmp_path, log):
+    _, data = log
+    store = write_session_store(data, str(tmp_path / "s"), shard_rows=400)
+    loader = StreamingClickLogLoader(store, batch_size=100, seed=1)
+    n = sum(1 for _ in loader.epochs(3))
+    assert n == 3 * loader.batches_per_epoch
+    assert loader.state.epoch == 3 and loader.state.step == 0
+
+
+def test_stream_through_device_prefetcher_resume(tmp_path, log):
+    """The streaming loader plugs into DevicePrefetcher; the recorded
+    per-batch state is the bit-exact resume point even though the loader
+    runs ahead by the prefetch depth."""
+    _, data = log
+    store = write_session_store(data, str(tmp_path / "s"), shard_rows=300)
+    mk = lambda: StreamingClickLogLoader(store, batch_size=64, seed=3,
+                                         drop_last=False)
+    recorded = list(DevicePrefetcher(mk(), size=3))
+    batches = [b for b, _ in recorded]
+    state_at_5 = recorded[4][1]
+    resumed = mk()
+    resumed.load_state_dict(state_at_5)
+    rest = [{k: np.asarray(v) for k, v in b.items()} for b in iter(resumed)]
+    batches_equal([{k: np.asarray(v) for k, v in b.items()}
+                   for b in batches[5:]], rest)
+
+
+def test_host_sharding_at_shard_granularity(tmp_path):
+    data = {"positions": np.tile(np.arange(1, 3, dtype=np.int32), (64, 1)),
+            "query_doc_ids": np.arange(128, dtype=np.int64).reshape(64, 2),
+            "clicks": np.zeros((64, 2), np.float32),
+            "mask": np.ones((64, 2), bool)}
+    store = write_session_store(data, str(tmp_path / "s"), shard_rows=16)
+    loaders = [StreamingClickLogLoader(store, batch_size=8, shuffle=False,
+                                       host_id=i, host_count=4)
+               for i in range(4)]
+    ids = []
+    for l in loaders:
+        assert l.n == 16  # 1 of 4 shards each
+        ids.append(set(np.concatenate(
+            [b["query_doc_ids"].reshape(-1) for b in iter(l)]).tolist()))
+    for i in range(4):
+        for j in range(i + 1, 4):
+            assert not (ids[i] & ids[j])
+    assert len(set().union(*ids)) == 128
+    with pytest.raises(ValueError, match="shard granularity"):
+        StreamingClickLogLoader(store, batch_size=8, host_id=0, host_count=5)
+
+
+def test_unequal_host_shards_stay_in_lockstep(tmp_path):
+    """Hosts with unequal row counts (partial last shard) must still agree
+    on batches_per_epoch, or pod-scale collectives desync."""
+    n = 64
+    data = {"positions": np.tile(np.arange(1, 3, dtype=np.int32), (n, 1)),
+            "query_doc_ids": np.arange(2 * n, dtype=np.int64).reshape(n, 2),
+            "clicks": np.zeros((n, 2), np.float32),
+            "mask": np.ones((n, 2), bool)}
+    store = write_session_store(data, str(tmp_path / "s"), shard_rows=24)
+    assert [store.shard_rows(i) for i in range(3)] == [24, 24, 16]
+    loaders = [StreamingClickLogLoader(store, batch_size=8, seed=2,
+                                       host_id=i, host_count=3)
+               for i in range(3)]
+    assert [l.n for l in loaders] == [24, 24, 16]  # unequal placement...
+    assert {l.batches_per_epoch for l in loaders} == {2}  # ...equal steps
+    for l in loaders:
+        assert len(list(iter(l))) == 2
+    with pytest.raises(ValueError, match="drop_last"):
+        StreamingClickLogLoader(store, batch_size=8, drop_last=False,
+                                host_id=0, host_count=3)
+    # a host with surplus rows must not read shards past the epoch's step
+    # cap (2 batches * 8 rows fit entirely in its first 24-row shard)
+    surplus = loaders[0]
+    opened = []
+    real = store.open_shard
+    store.open_shard = lambda i, **kw: (opened.append(i), real(i, **kw))[1]
+    try:
+        assert len(list(iter(surplus))) == 2
+    finally:
+        store.open_shard = real
+    assert set(opened) <= {0}
+
+
+def test_read_ahead_failure_propagates(tmp_path, log):
+    _, data = log
+    store = write_session_store(data, str(tmp_path / "s"), shard_rows=300)
+    loader = StreamingClickLogLoader(store, batch_size=64, seed=0,
+                                     read_ahead=2)
+    os.remove(tmp_path / "s" / "shard_00002" / "clicks.bin")
+    with pytest.raises(FileNotFoundError):
+        list(iter(loader))
+
+
+def test_stream_trains_identically_to_in_memory(tmp_path, log):
+    """Same data, same seeds: a Trainer fed by the streaming loader must
+    produce bit-identical params to one fed by ClickLogLoader."""
+    import jax
+    from repro import optim
+    from repro.core import PositionBasedModel
+    from repro.train import Trainer
+
+    cfg, data = log
+    store = write_session_store(data, str(tmp_path / "s"), shard_rows=10_000)
+    model = PositionBasedModel(query_doc_pairs=cfg.n_query_doc_pairs,
+                               positions=cfg.positions)
+
+    def run(loader):
+        trainer = Trainer(optim.adamw(0.01), epochs=2, patience=100,
+                          log_fn=lambda *_: None)
+        trainer.train(model, loader)
+        return trainer._final_state.params
+
+    p_mem = run(ClickLogLoader(data, batch_size=128, seed=4))
+    p_stream = run(StreamingClickLogLoader(store, batch_size=128, seed=4))
+    for (ka, a), (_, b) in zip(
+            jax.tree_util.tree_leaves_with_path(p_mem),
+            jax.tree_util.tree_leaves_with_path(p_stream)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=str(ka))

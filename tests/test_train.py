@@ -132,3 +132,61 @@ def test_loader_host_sharding_disjoint():
         for j in range(i + 1, 4):
             assert not (ids[i] & ids[j])
     assert len(set().union(*ids)) == 128
+
+
+def test_split_sessions_partitions_exactly():
+    # 25 * (0.8, 0.1, 0.1) rounds to 20 + 2 + 2 = 24: the old per-fraction
+    # rounding silently dropped a tail session. The last split must take the
+    # exact remainder and the splits must partition the input.
+    for n, fractions in [(25, (0.8, 0.1, 0.1)), (10, (1 / 3, 1 / 3, 1 / 3)),
+                         (7, (0.5, 0.25, 0.25)), (5, (0.9, 0.05, 0.05))]:
+        data = {"positions": np.tile(np.arange(1, 3, dtype=np.int32), (n, 1)),
+                "query_doc_ids": np.arange(n, dtype=np.int64)[:, None]
+                * np.ones((1, 2), np.int64)}
+        splits = split_sessions(data, fractions, seed=1)
+        sizes = [s["positions"].shape[0] for s in splits]
+        assert sum(sizes) == n, (n, fractions, sizes)
+        ids = [set(s["query_doc_ids"][:, 0].tolist()) for s in splits]
+        assert not (ids[0] & ids[1] or ids[0] & ids[2] or ids[1] & ids[2])
+        assert set().union(*ids) == set(range(n))
+
+
+def _tiny_log(n=103, k=4):
+    return {"positions": np.tile(np.arange(1, k + 1, dtype=np.int32), (n, 1)),
+            "query_doc_ids": np.arange(n * k, dtype=np.int64).reshape(n, k),
+            "clicks": np.zeros((n, k), np.float32),
+            "mask": np.ones((n, k), bool)}
+
+
+def test_loader_drop_last_false_final_partial_batch():
+    data = _tiny_log(n=103)
+    loader = ClickLogLoader(data, batch_size=10, seed=2, drop_last=False)
+    assert loader.batches_per_epoch == 11
+    batches = list(iter(loader))
+    assert [b["clicks"].shape[0] for b in batches] == [10] * 10 + [3]
+    for b in batches:
+        assert b["query_doc_ids"].shape[1:] == (4,)
+    seen = np.concatenate([b["query_doc_ids"][:, 0] for b in batches])
+    assert len(set(seen.tolist())) == 103  # every session exactly once
+
+
+def test_loader_drop_last_false_prefetcher_resume_bit_exact():
+    """Mid-epoch resume through DevicePrefetcher while the final partial
+    batch is in flight inside the prefetch queue."""
+    from repro.data import DevicePrefetcher
+
+    data = _tiny_log(n=103)
+    mk = lambda: ClickLogLoader(data, batch_size=10, seed=2, drop_last=False)
+    recorded = list(DevicePrefetcher(mk(), size=3))
+    assert len(recorded) == 11
+    # resume from batch 9: the partial batch 11 was already prefetched when
+    # batch 9's state was recorded (loader ran ahead by the prefetch depth)
+    state = recorded[8][1]
+    resumed = mk()
+    resumed.load_state_dict(state)
+    rest = list(iter(resumed))
+    assert [b["clicks"].shape[0] for b in rest] == [10, 3]
+    for want, got in zip(recorded[9:], rest):
+        for k in got:
+            np.testing.assert_array_equal(np.asarray(want[0][k]),
+                                          np.asarray(got[k]), err_msg=k)
