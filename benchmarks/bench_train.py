@@ -1,0 +1,166 @@
+"""Host-side training-loop throughput: per-batch loop vs the fused engine.
+
+The historical trainer loop pays one jit dispatch plus one blocking
+``float(loss)`` host round-trip per optimizer step. The engine
+(`repro.train.engine.TrainEngine`) stacks ``--chunks`` batches per dispatch
+(`DevicePrefetcher(chunk_batches=N)`), runs one jit'd ``lax.scan`` over the
+chunk with donated state, and fetches the on-device ``(N,)`` loss array one
+chunk behind — so host work per step shrinks to ``1/N`` dispatches and the
+loop never blocks on the step it just issued.
+
+Measures steps/sec through the *real* trainer path (loader ->
+DevicePrefetcher -> jit'd step(s)) for the loop and for several chunk
+sizes, interleaved best-of-``--reps`` (walltime on shared CPU is noisy).
+The math is bit-exact across all variants (pinned by tests/test_engine.py),
+so this benchmark tracks pure host/dispatch overhead.
+
+Writes BENCH_train.json next to this file (or --out) so the training-loop
+throughput trajectory is recorded per PR.
+
+Run: PYTHONPATH=src python benchmarks/bench_train.py [--sessions 60000]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+# Allow running without PYTHONPATH=src.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+from repro import optim  # noqa: E402
+from repro.core import PositionBasedModel  # noqa: E402
+from repro.data import (ClickLogLoader, DevicePrefetcher, SyntheticConfig,  # noqa: E402
+                        generate_click_log)
+from repro.train import TrainEngine  # noqa: E402
+
+
+def make_setup(args):
+    cfg = SyntheticConfig(n_sessions=args.sessions,
+                          n_queries=max(args.sessions // 200, 10),
+                          docs_per_query=20, positions=10, behavior="pbm",
+                          seed=0)
+    data, _ = generate_click_log(cfg)
+    model = PositionBasedModel(query_doc_pairs=cfg.n_query_doc_pairs,
+                               positions=cfg.positions, init_prob=0.2)
+    return cfg, data, model
+
+
+def run_loop(model, data, args):
+    """The pre-engine loop: one jit dispatch + float(loss) sync per step."""
+    tx = optim.adamw(args.lr)
+    params = model.init(jax.random.PRNGKey(0))
+    opt_state = tx.init(params)
+
+    @jax.jit
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(model.compute_loss)(params, batch)
+        updates, opt_state = tx.update(grads, opt_state, params)
+        return optim.apply_updates(params, updates), opt_state, loss
+
+    loader = ClickLogLoader(data, batch_size=args.batch, seed=0)
+
+    def epoch():
+        nonlocal params, opt_state
+        n, loss_sum = 0, 0.0
+        t0 = time.perf_counter()
+        for batch, _ in DevicePrefetcher(loader):
+            params, opt_state, loss = step(params, opt_state, batch)
+            loss_sum += float(loss)  # the blocking transfer under test
+            n += 1
+        return n, time.perf_counter() - t0
+
+    return epoch
+
+
+def run_engine(model, data, args, chunk):
+    engine = TrainEngine(model, optim.adamw(args.lr), chunk_batches=chunk)
+    params = model.init(jax.random.PRNGKey(0))
+    opt_state = engine.init_opt_state(params)
+    loader = ClickLogLoader(data, batch_size=args.batch, seed=0)
+
+    def epoch():
+        nonlocal params, opt_state
+        n, loss_sum = 0, 0.0
+        pending = None
+        t0 = time.perf_counter()
+        for chunk_arr, _, m in DevicePrefetcher(loader, chunk_batches=chunk):
+            params, opt_state, losses = engine.step(params, opt_state,
+                                                    chunk_arr)
+            if pending is not None:  # drain one chunk behind the dispatch
+                loss_sum += float(np.sum(np.asarray(pending)))
+            pending = losses
+            n += m
+        if pending is not None:
+            loss_sum += float(np.sum(np.asarray(pending)))
+        return n, time.perf_counter() - t0
+
+    return epoch
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sessions", type=int, default=60_000)
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--chunks", type=int, nargs="+", default=[1, 8, 32])
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--out", default=os.path.join(os.path.dirname(__file__),
+                                                  "BENCH_train.json"))
+    args = ap.parse_args()
+
+    cfg, data, model = make_setup(args)
+    variants = {"loop": run_loop(model, data, args)}
+    for chunk in args.chunks:
+        variants[f"engine_chunk_{chunk}"] = run_engine(model, data, args,
+                                                       chunk)
+
+    # Warm every variant (compiles full + partial chunk shapes), then time
+    # interleaved so machine noise hits all variants alike.
+    for epoch in variants.values():
+        epoch()
+    best = {name: float("inf") for name in variants}
+    steps = {}
+    for _ in range(args.reps):
+        for name, epoch in variants.items():
+            n, sec = epoch()
+            steps[name] = n
+            best[name] = min(best[name], sec)
+
+    results = {name: {"steps": steps[name], "seconds": best[name],
+                      "steps_per_s": steps[name] / best[name]}
+               for name in variants}
+    for name, r in results.items():
+        print(f"[bench_train] {name:16s} {r['steps']:4d} steps in "
+              f"{r['seconds']:.3f}s  ({r['steps_per_s']:.1f} steps/s)")
+
+    loop_sps = results["loop"]["steps_per_s"]
+    speedups = {name: r["steps_per_s"] / loop_sps
+                for name, r in results.items() if name != "loop"}
+    out = {
+        "sessions": args.sessions,
+        "batch": args.batch,
+        "positions": cfg.positions,
+        "query_doc_pairs": cfg.n_query_doc_pairs,
+        "reps": args.reps,
+        "results": results,
+        "speedup_vs_loop": speedups,
+    }
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+    big = max((c for c in args.chunks if c >= 8), default=None)
+    if big is not None:
+        print(f"[bench_train] wrote {args.out} (engine chunk {big}: "
+              f"{speedups[f'engine_chunk_{big}']:.2f}x the per-batch loop)")
+    else:
+        print(f"[bench_train] wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -164,14 +164,26 @@ class EmbeddingParameter(Module):
             params["baseline"] = jnp.full((c.features,), c.init_logit, jnp.float32)
         return params
 
-    def __call__(self, params, batch):
+    def row_ids(self, batch):
+        """Table rows the batch gathers — the single home of this
+        parameterization's index math (forward lookup and the sparse-optimizer
+        row stream must agree row-for-row). QR has no single row-id table
+        (each logical row is a product of two table rows)."""
         c = self.config
         ids = batch[c.use_feature]
         if c.compression == Compression.NONE:
-            logits = jnp.take(params["table"], jnp.clip(ids, 0, self.table_rows - 1), axis=0)
-        elif c.compression == Compression.HASH:
-            logits = jnp.take(params["table"], hash_ids(ids, self.table_rows), axis=0)
+            return jnp.clip(ids, 0, self.table_rows - 1)
+        if c.compression == Compression.HASH:
+            return hash_ids(ids, self.table_rows)
+        raise NotImplementedError(
+            "quotient-remainder compression has no single row-id stream")
+
+    def __call__(self, params, batch):
+        c = self.config
+        if c.compression in (Compression.NONE, Compression.HASH):
+            logits = jnp.take(params["table"], self.row_ids(batch), axis=0)
         else:  # QR: element-wise product of quotient and remainder rows
+            ids = batch[c.use_feature]
             q = jnp.take(params["quotient"], (ids // self.rem_rows) % self.quot_rows, axis=0)
             r = jnp.take(params["remainder"], ids % self.rem_rows, axis=0)
             logits = q * r

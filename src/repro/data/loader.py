@@ -123,21 +123,64 @@ class DevicePrefetcher:
     is the loader's resume point recorded *when that batch was produced*;
     mid-epoch checkpoints must save it (not ``loader.state_dict()``, which has
     run up to ``size`` batches ahead) to stay bit-exact across preemption.
+
+    **Chunk mode** (``chunk_batches=N``): stacks N consecutive host batches
+    into one ``(N, B, ...)`` array per key before the single ``device_put``,
+    and yields ``(chunk, loader_state, n)`` triples instead of pairs, where
+    ``loader_state`` is the resume point of the chunk's *last* batch (the
+    correct cursor after all ``n`` contained steps ran) and ``n <= N`` (the
+    epoch tail may form a partial chunk). A batch whose shapes differ from
+    the chunk being accumulated (e.g. the final ``drop_last=False`` partial
+    batch) flushes the current chunk and starts its own, so every yielded
+    chunk is rectangular. This feeds the scan-jitted
+    :class:`repro.train.engine.TrainEngine` one dispatch per N steps.
+
+    ``device`` may be a ``jax.sharding.Sharding`` (e.g. a NamedSharding
+    splitting the batch axis over a data-parallel mesh) — ``device_put``
+    then places each (stacked) batch directly into its sharded layout — or
+    a callable ``batch -> device/sharding`` for per-batch placement (e.g.
+    shard divisible batches, replicate the ``drop_last=False`` tail).
     """
 
-    def __init__(self, loader, size: int = 2, device=None):
+    def __init__(self, loader, size: int = 2, device=None,
+                 chunk_batches: Optional[int] = None):
         if size < 1:
             raise ValueError(f"prefetch size must be >= 1, got {size}")
+        if chunk_batches is not None and chunk_batches < 1:
+            raise ValueError(
+                f"chunk_batches must be >= 1, got {chunk_batches}")
+        if chunk_batches is not None and callable(device):
+            # A batch-shaped callable would see the stacked (N, B, ...)
+            # chunk and shard the scanned axis; chunks take one fixed
+            # sharding (e.g. TrainEngine.batch_sharding()).
+            raise ValueError(
+                "callable device is not supported with chunk_batches — "
+                "pass a fixed sharding shaped for the stacked chunk")
         self.loader = loader
         self.size = size
         self.device = device
+        self.chunk_batches = chunk_batches
 
     def _put(self, batch):
         import jax
 
-        return {k: jax.device_put(v, self.device) for k, v in batch.items()}
+        device = self.device(batch) if callable(self.device) else self.device
+        return {k: jax.device_put(v, device) for k, v in batch.items()}
+
+    def _pump(self, pull, queue):
+        """Prime ``size`` items, then refill one ahead of each yield so the
+        host work behind ``pull`` overlaps the consumer's compute."""
+        for _ in range(self.size):
+            pull()
+        while queue:
+            item = queue.popleft()
+            pull()  # refill before handing control back to compute
+            yield item
 
     def __iter__(self):
+        if self.chunk_batches is not None:
+            yield from self._iter_chunks()
+            return
         queue = collections.deque()
         it = iter(self.loader)
         get_state = getattr(self.loader, "state_dict", lambda: None)
@@ -149,9 +192,41 @@ class DevicePrefetcher:
                 return
             queue.append((self._put(batch), get_state()))
 
-        for _ in range(self.size):
-            pull()
-        while queue:
-            item = queue.popleft()
-            pull()  # refill before handing control back to compute
-            yield item
+        yield from self._pump(pull, queue)
+
+    def _iter_chunks(self):
+        queue = collections.deque()
+        it = iter(self.loader)
+        get_state = getattr(self.loader, "state_dict", lambda: None)
+        pushback = []  # one-batch lookahead for the shape-change flush
+
+        def next_host():
+            if pushback:
+                return pushback.pop()
+            try:
+                batch = next(it)
+            except StopIteration:
+                return None
+            return batch, get_state()
+
+        def pull():
+            batches, state, sig = [], None, None
+            while len(batches) < self.chunk_batches:
+                item = next_host()
+                if item is None:
+                    break
+                batch, s = item
+                bsig = {k: (v.shape, v.dtype) for k, v in batch.items()}
+                if sig is not None and bsig != sig:
+                    pushback.append(item)
+                    break
+                sig = bsig
+                batches.append(batch)
+                state = s
+            if not batches:
+                return
+            chunk = {k: np.stack([b[k] for b in batches])
+                     for k in batches[0]}
+            queue.append((self._put(chunk), state, len(batches)))
+
+        yield from self._pump(pull, queue)

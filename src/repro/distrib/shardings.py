@@ -22,9 +22,25 @@ def DATA_AXES(mesh) -> tuple:
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 
 
+def data_parallel_size(mesh) -> int:
+    """Total ways the batch axis splits: product of the data-axis sizes."""
+    size = 1
+    for axis in DATA_AXES(mesh):
+        size *= mesh.shape[axis]
+    return size
+
+
 def batch_spec(mesh, extra_dims: int = 1) -> P:
     """Leading dim over all data axes; remaining dims replicated."""
     return P(DATA_AXES(mesh), *([None] * extra_dims))
+
+
+def chunked_batch_spec(mesh) -> P:
+    """Spec for a ``(chunk, batch, ...)`` stacked-batch array: the chunk axis
+    is scanned over (replicated), the batch axis splits over the data axes,
+    trailing dims replicated (a PartitionSpec shorter than the rank leaves
+    the remaining dims unsharded)."""
+    return P(None, DATA_AXES(mesh))
 
 
 def table_spec(mesh, extra_dims: int = 1) -> P:

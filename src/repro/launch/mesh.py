@@ -17,3 +17,14 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_smoke_mesh(n_devices: int = 1):
     """Single-host mesh for tests: (1, n) data x model."""
     return make_auto_mesh((1, n_devices), ("data", "model"))
+
+
+def make_data_parallel_mesh(n_devices: int | None = None):
+    """(n, 1) data x model mesh over all local devices: batches split over
+    'data', params (``clax_param_rule``) land on the size-1 'model' axis —
+    i.e. replicated across the data ranks. The shape every single-host
+    ``--data-parallel`` training run uses."""
+    import jax
+
+    n = n_devices or jax.local_device_count()
+    return make_auto_mesh((n, 1), ("data", "model"))

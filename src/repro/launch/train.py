@@ -19,6 +19,11 @@ when ``--ingest`` is omitted; the model is sized from the ``SyntheticConfig``
 recorded in the store manifest, so train-from-store needs no generation
 flags at all.
 
+Training-engine knobs (see README "Training engine"): ``--chunk-batches N``
+fuses N optimizer steps into one scan-jitted dispatch, ``--data-parallel``
+shards the batch axis over all local devices, ``--sparse-tables`` switches
+embedding tables to lazy-AdamW scatter updates.
+
 Single-host here; at pod scale the same entry point runs per host with
 --host-id/--host-count carving the data shard (rows of the in-memory dict,
 or whole store shards for the streaming path) and jax.distributed
@@ -115,9 +120,30 @@ def main():
     ap.add_argument("--window-rows", type=int, default=None,
                     help="streaming read window within a shard (default: full "
                          "shard)")
+    ap.add_argument("--chunk-batches", type=int, default=8,
+                    help="batches fused into one scan-jitted dispatch "
+                         "(1 = the historical per-batch loop, bit-exact)")
+    ap.add_argument("--data-parallel", action="store_true",
+                    help="shard the batch axis over all local devices "
+                         "(requires --batch divisible by the device count)")
+    ap.add_argument("--sparse-tables", action="store_true",
+                    help="lazy-AdamW scatter updates for embedding tables: "
+                         "optimizer state traffic O(unique batch rows) "
+                         "instead of O(table rows)")
     args = ap.parse_args()
     if args.ingest and not args.store_dir:
         ap.error("--ingest requires --store-dir")
+    if args.sparse_tables and args.compression == "quotient_remainder":
+        # fail before a potentially hours-long ingest, not inside train()
+        ap.error("--sparse-tables does not support quotient_remainder "
+                 "compression (two coupled tables, no single row-id stream)")
+
+    mesh = None
+    if args.data_parallel:
+        from repro.launch.mesh import make_data_parallel_mesh
+
+        mesh = make_data_parallel_mesh()
+        print(f"[train] data-parallel mesh: {dict(mesh.shape)}")
 
     train_loader, val_loader, test_loader, data_cfg = make_loaders(args)
 
@@ -135,7 +161,12 @@ def main():
                       epochs=args.epochs, patience=1,
                       checkpoint_dir=args.ckpt_dir,
                       checkpoint_every_steps=200 if args.ckpt_dir else None,
-                      handle_preemption=True)
+                      handle_preemption=True,
+                      chunk_batches=args.chunk_batches, mesh=mesh,
+                      sparse_tables=args.sparse_tables,
+                      # must mirror the dense optimizer above — the sparse
+                      # path cannot introspect the transformation chain
+                      sparse_table_kwargs=dict(lr=args.lr, weight_decay=1e-4))
     trainer.train(model, train_loader, val_loader, resume=bool(args.ckpt_dir))
     results = trainer.test(model, test_loader)
     print("[train] test:", {k: round(v, 4) for k, v in results.items()

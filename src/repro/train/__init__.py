@@ -1,11 +1,15 @@
-"""Training runtime: Trainer, checkpointing, fault tolerance."""
+"""Training runtime: Trainer, chunked scan engine, checkpointing, fault
+tolerance."""
 from repro.train.trainer import Trainer, TrainState
+from repro.train.engine import TrainEngine, discover_sparse_tables
 from repro.train.checkpoints import CheckpointManager
 from repro.train.fault_tolerance import PreemptionHandler, drop_slowest_aggregate
 
 __all__ = [
     "Trainer",
     "TrainState",
+    "TrainEngine",
+    "discover_sparse_tables",
     "CheckpointManager",
     "PreemptionHandler",
     "drop_slowest_aggregate",

@@ -1,0 +1,233 @@
+"""Fused multi-batch training engine: scan-jitted steps, device-resident
+loss accumulation, data-parallel sharding, and sparse embedding updates.
+
+The per-batch Python loop (one jit dispatch + one blocking ``float(loss)``
+host round-trip per step) starves the accelerator: the vectorized recursions
+and the streaming store produce batches faster than the host can dispatch
+them one at a time. The engine replaces it with a chunked execution core:
+
+* **Chunked scan** — :class:`repro.data.DevicePrefetcher` with
+  ``chunk_batches=N`` stacks N host batches into one ``(N, B, ...)`` device
+  array; ``TrainEngine.step`` runs a single jit'd ``lax.scan`` over the
+  chunk with donated ``(params, opt_state)``. One dispatch per N optimizer
+  steps, per-step losses accumulated on device as an ``(N,)`` array the
+  caller fetches asynchronously (one chunk behind — see ``Trainer.train``).
+* **Data parallelism** — given a ``mesh`` (see
+  :func:`repro.launch.mesh.make_data_parallel_mesh`), batches get a
+  ``P(None, 'data')`` NamedSharding (chunk axis replicated, batch rows
+  split) and params/opt-state get :func:`repro.distrib.shardings.clax_param_rule`
+  shardings, so the same scanned step runs SPMD across all local devices.
+  With ``mesh=None`` nothing is placed and the math is bit-exact with the
+  historical per-batch loop (pinned by tests/test_engine.py).
+* **Sparse tables** — with ``sparse_tables=True``, gradients of every
+  :class:`~repro.core.parameterization.EmbeddingParameter` table part are
+  routed through :mod:`repro.optim.sparse` lazy AdamW: the optimizer
+  read-modify-writes only the batch's unique rows (O(U·d) state traffic
+  instead of the dense 3×O(R·d) moment update), all other params keep the
+  trainer's dense optimizer. Requires explicit hyperparameters
+  (``sparse_table_kwargs``) because gradient-transformation chains cannot
+  be introspected; lr schedules are not supported on the sparse side.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+
+from repro import optim as optim_lib
+from repro.core.parameterization import Compression, EmbeddingParameter
+from repro.optim.sparse import (init_sparse_table_state, sparse_adamw_update,
+                                unique_rows_with_sentinel)
+
+SPARSE_PATH_SEP = "/"
+
+
+def _tree_get(tree, path: Tuple[str, ...]):
+    for key in path:
+        tree = tree[key]
+    return tree
+
+
+def _tree_set(tree, path: Tuple[str, ...], value):
+    """Functionally replace ``tree[path]`` (nested dicts) with ``value``."""
+    if not path:
+        return value
+    out = dict(tree)
+    out[path[0]] = _tree_set(tree[path[0]], path[1:], value)
+    return out
+
+
+def discover_sparse_tables(model) -> Dict[Tuple[str, ...], EmbeddingParameter]:
+    """Map param path -> EmbeddingParameter for every table part of ``model``.
+
+    Only single-table parameterizations qualify: QR compression splits each
+    logical row across two tables and has no single row-id stream.
+    """
+    parts = getattr(model, "parts", None) or {}
+    out = {}
+    for name, part in parts.items():
+        if isinstance(part, EmbeddingParameter):
+            if part.config.compression == Compression.QR:
+                raise NotImplementedError(
+                    f"sparse_tables: part {name!r} uses quotient-remainder "
+                    "compression (two coupled tables, no single row-id "
+                    "stream) — train it with the dense optimizer")
+            out[(name, "table")] = part
+    if not out:
+        raise ValueError(
+            "sparse_tables=True but the model has no EmbeddingParameter "
+            "parts — nothing to update sparsely")
+    return out
+
+
+class TrainEngine:
+    """Chunked, optionally data-parallel and table-sparse, train-step core.
+
+    Usage (what ``Trainer.train`` does)::
+
+        engine = TrainEngine(model, optimizer, chunk_batches=16, mesh=mesh)
+        opt_state = engine.init_opt_state(params)
+        params, opt_state = engine.place(params, opt_state)
+        for chunk, loader_state, n in DevicePrefetcher(
+                loader, chunk_batches=engine.chunk_batches,
+                device=engine.batch_sharding()):
+            params, opt_state, losses = engine.step(params, opt_state, chunk)
+            # losses: (n,) device array — fetch it one chunk behind
+
+    ``step`` retraces per distinct chunk shape: full chunks plus one
+    compile per tail shape (a shorter trailing chunk, and the odd-sized
+    ``drop_last=False`` batch in its own chunk).
+    """
+
+    def __init__(self, model, optimizer, *, chunk_batches: int = 1,
+                 mesh=None, sparse_tables: bool = False,
+                 sparse_table_kwargs: Optional[Dict[str, Any]] = None,
+                 loss_fn: Optional[Callable] = None):
+        if chunk_batches < 1:
+            raise ValueError(f"chunk_batches must be >= 1, got {chunk_batches}")
+        self.model = model
+        self.optimizer = optimizer
+        self.chunk_batches = int(chunk_batches)
+        self.mesh = mesh
+        self.loss_fn = loss_fn or model.compute_loss
+        self.sparse_parts = discover_sparse_tables(model) if sparse_tables else {}
+        if self.sparse_parts:
+            kwargs = dict(sparse_table_kwargs or {})
+            missing = [k for k in ("lr", "weight_decay") if k not in kwargs]
+            if missing:
+                # Gradient-transformation chains can't be introspected, and
+                # the defaults disagree (optim.adamw decays at 1e-4,
+                # sparse_adamw_update at 0.0) — silence here would quietly
+                # break the touched-rows == dense-AdamW guarantee.
+                raise ValueError(
+                    f"sparse_tables=True needs sparse_table_kwargs with "
+                    f"{missing} mirroring the dense optimizer (pass b1/b2/"
+                    f"eps too if the dense optimizer overrides them)")
+            self.sparse_kwargs = kwargs
+        else:
+            self.sparse_kwargs = {}
+        self._step = jax.jit(self._chunk_step, donate_argnums=(0, 1))
+
+    # -- optimizer state -------------------------------------------------------
+    def init_opt_state(self, params):
+        """Dense optimizer state, or ``{"dense": ..., "sparse": {...}}`` when
+        table grads are routed through the lazy-AdamW path (table leaves are
+        masked to ``None`` in the dense subtree so dense moments never
+        materialize for them)."""
+        if not self.sparse_parts:
+            return self.optimizer.init(params)
+        dense_params = params
+        sparse = {}
+        for path in self.sparse_parts:
+            sparse[SPARSE_PATH_SEP.join(path)] = init_sparse_table_state(
+                _tree_get(params, path))
+            dense_params = _tree_set(dense_params, path, None)
+        return {"dense": self.optimizer.init(dense_params), "sparse": sparse}
+
+    # -- sharding --------------------------------------------------------------
+    def batch_sharding(self):
+        """NamedSharding for a stacked ``(chunk, batch, ...)`` array: chunk
+        axis replicated (it is scanned over), batch rows split over the data
+        axes. ``None`` (single-device) when no mesh is configured."""
+        if self.mesh is None:
+            return None
+        from jax.sharding import NamedSharding
+
+        from repro.distrib.shardings import chunked_batch_spec
+
+        return NamedSharding(self.mesh, chunked_batch_spec(self.mesh))
+
+    def data_parallel_size(self) -> int:
+        if self.mesh is None:
+            return 1
+        from repro.distrib.shardings import data_parallel_size
+
+        return data_parallel_size(self.mesh)
+
+    def place(self, params, opt_state):
+        """device_put params/opt-state with ``clax_param_rule`` shardings
+        (big tables row-sharded over 'model', everything else replicated).
+        No-op without a mesh."""
+        if self.mesh is None:
+            return params, opt_state
+        from repro.distrib.shardings import clax_param_rule, make_shardings
+
+        rule = clax_param_rule(self.mesh)
+        params = jax.device_put(params, make_shardings(self.mesh, params, rule))
+        opt_state = jax.device_put(
+            opt_state, make_shardings(self.mesh, opt_state, rule))
+        return params, opt_state
+
+    # -- the scanned step ------------------------------------------------------
+    def _one_step(self, params, opt_state, batch):
+        loss, grads = jax.value_and_grad(self.loss_fn)(params, batch)
+        if not self.sparse_parts:
+            updates, opt_state = self.optimizer.update(grads, opt_state, params)
+            params = optim_lib.apply_updates(params, updates)
+            return params, opt_state, loss
+        # Sparse route: mask table leaves out of the dense update (None is an
+        # empty pytree node, so the dense optimizer never touches them), then
+        # scatter-update each table from the batch's unique rows.
+        dense_params, dense_grads = params, grads
+        for path in self.sparse_parts:
+            dense_params = _tree_set(dense_params, path, None)
+            dense_grads = _tree_set(dense_grads, path, None)
+        updates, dense_state = self.optimizer.update(
+            dense_grads, opt_state["dense"], dense_params)
+        new_params = optim_lib.apply_updates(dense_params, updates)
+        sparse_state = {}
+        for path, part in self.sparse_parts.items():
+            key = SPARSE_PATH_SEP.join(path)
+            table = _tree_get(params, path)
+            d_table = _tree_get(grads, path)
+            # Autodiff already summed duplicate lookups into d_table's rows;
+            # dedupe the id stream and gather exactly those row-grads. Pad
+            # slots use an out-of-range sentinel whose writes the scatter
+            # drops (see optim/sparse.py).
+            rows = unique_rows_with_sentinel(part.row_ids(batch),
+                                             table.shape[0])
+            new_table, st = sparse_adamw_update(
+                table, opt_state["sparse"][key], rows,
+                d_table.at[rows].get(mode="clip"), **self.sparse_kwargs)
+            new_params = _tree_set(new_params, path, new_table)
+            sparse_state[key] = st
+        return new_params, {"dense": dense_state, "sparse": sparse_state}, loss
+
+    def _chunk_step(self, params, opt_state, chunk):
+        def body(carry, batch):
+            params, opt_state = carry
+            params, opt_state, loss = self._one_step(params, opt_state, batch)
+            return (params, opt_state), loss
+
+        (params, opt_state), losses = jax.lax.scan(
+            body, (params, opt_state), chunk)
+        return params, opt_state, losses
+
+    def step(self, params, opt_state, chunk):
+        """One fused dispatch: ``n = chunk.shape[0]`` optimizer steps.
+
+        Donates ``(params, opt_state)``; returns the new state plus the
+        ``(n,)`` per-step loss array, still on device — do not block on it
+        before dispatching the next chunk.
+        """
+        return self._step(params, opt_state, chunk)

@@ -4,10 +4,16 @@
     history = trainer.train(model, train_loader, val_loader)
     results = trainer.test(model, test_loader)
 
-Implements: jit'd update step (donated state), per-epoch validation with the
-paper's click metrics, early stopping after the first epoch without val-loss
-improvement (paper §6), periodic + preemption-triggered atomic checkpoints,
-and bit-exact resume (params + optimizer + loader state + epoch counter).
+Implements: chunked scan-jitted update steps through
+:class:`repro.train.engine.TrainEngine` (one dispatch and zero host syncs
+per ``chunk_batches`` steps; per-step losses accumulate on device and are
+fetched one chunk behind the dispatch), optional data-parallel execution
+over a mesh and sparse embedding-table updates, per-epoch validation with
+the paper's click metrics (compiled eval step cached across epochs, one
+host transfer per evaluate call), early stopping after the first epoch
+without val-loss improvement (paper §6), periodic + preemption-triggered
+atomic checkpoints at chunk granularity, and bit-exact resume (params +
+optimizer + loader state + epoch counter).
 """
 from __future__ import annotations
 
@@ -18,11 +24,11 @@ from typing import Any, Callable, Dict, List, Optional
 import jax
 import numpy as np
 
-from repro import optim as optim_lib
 from repro.core.metrics import (ConditionalPerplexity, LogLikelihood, MultiMetric,
                                 Perplexity)
 from repro.data.loader import DevicePrefetcher
 from repro.train.checkpoints import CheckpointManager
+from repro.train.engine import TrainEngine
 from repro.train.fault_tolerance import PreemptionHandler
 
 
@@ -49,7 +55,11 @@ class Trainer:
                  keep_checkpoints: int = 3,
                  metrics_factory: Callable[[], MultiMetric] = default_metrics,
                  log_fn: Callable[[str], None] = print,
-                 handle_preemption: bool = False):
+                 handle_preemption: bool = False,
+                 chunk_batches: int = 1,
+                 mesh=None,
+                 sparse_tables: bool = False,
+                 sparse_table_kwargs: Optional[Dict[str, Any]] = None):
         self.optimizer = optimizer
         self.epochs = epochs
         self.patience = patience
@@ -60,18 +70,20 @@ class Trainer:
         self.ckpt = (CheckpointManager(checkpoint_dir, keep=keep_checkpoints)
                      if checkpoint_dir else None)
         self.handle_preemption = handle_preemption
+        self.chunk_batches = chunk_batches
+        self.mesh = mesh
+        self.sparse_tables = sparse_tables
+        self.sparse_table_kwargs = sparse_table_kwargs
+        # Compiled eval step per model: _make_eval_step used to be re-jitted
+        # (a fresh trace + compile) on every evaluate() call — epochs 2..n
+        # now reuse the cached (metrics, compiled step) pair.
+        self._eval_cache: Dict[Any, tuple] = {}
 
-    # -- jit'd step --------------------------------------------------------------
-    def _make_step(self, model):
-        optimizer = self.optimizer
-
-        def step(params, opt_state, batch):
-            loss, grads = jax.value_and_grad(model.compute_loss)(params, batch)
-            updates, opt_state = optimizer.update(grads, opt_state, params)
-            params = optim_lib.apply_updates(params, updates)
-            return params, opt_state, loss
-
-        return jax.jit(step, donate_argnums=(0, 1))
+    def _make_engine(self, model) -> TrainEngine:
+        return TrainEngine(model, self.optimizer,
+                           chunk_batches=self.chunk_batches, mesh=self.mesh,
+                           sparse_tables=self.sparse_tables,
+                           sparse_table_kwargs=self.sparse_table_kwargs)
 
     def _make_eval_step(self, model, metrics):
         def eval_step(params, state, batch):
@@ -83,13 +95,26 @@ class Trainer:
 
         return jax.jit(eval_step)
 
+    def _get_eval_step(self, model):
+        if model not in self._eval_cache:
+            # bounded: a trainer reused across a sweep of models must not
+            # pin every model's metrics + compiled executable forever
+            while len(self._eval_cache) >= 4:
+                self._eval_cache.pop(next(iter(self._eval_cache)))
+            metrics = self.metrics_factory()
+            self._eval_cache[model] = (metrics,
+                                       self._make_eval_step(model, metrics))
+        return self._eval_cache[model]
+
     # -- public API ----------------------------------------------------------------
     def train(self, model, train_loader, val_loader=None,
               state: Optional[TrainState] = None,
               resume: bool = False) -> List[Dict[str, float]]:
+        engine = self._make_engine(model)
         if state is None:
             params = model.init(jax.random.PRNGKey(self.seed))
-            state = TrainState(params=params, opt_state=self.optimizer.init(params))
+            state = TrainState(params=params,
+                               opt_state=engine.init_opt_state(params))
         if resume and self.ckpt and self.ckpt.latest_step() is not None:
             tree = {"params": state.params, "opt_state": state.opt_state}
             tree, aux, _ = self.ckpt.restore(like=tree)
@@ -101,8 +126,20 @@ class Trainer:
                 train_loader.load_state_dict(aux["loader"])
             self.log_fn(f"[trainer] resumed at epoch={state.epoch} "
                         f"step={state.global_step}")
+        state.params, state.opt_state = engine.place(state.params,
+                                                     state.opt_state)
+        dp = engine.data_parallel_size()
+        batch_size = getattr(train_loader, "batch_size", None)
+        if dp > 1 and batch_size is not None and batch_size % dp:
+            raise ValueError(
+                f"batch_size {batch_size} is not divisible by the "
+                f"{dp}-way data-parallel mesh")
+        if dp > 1 and getattr(train_loader, "drop_last", True) is False:
+            raise ValueError(
+                "data-parallel training requires drop_last=True: the "
+                "tail batch generally cannot be split across the "
+                f"{dp}-way data axis (same rule as multi-host streaming)")
 
-        step_fn = self._make_step(model)
         preempt = PreemptionHandler() if self.handle_preemption else None
         history: List[Dict[str, float]] = []
         best_val = float("inf")
@@ -111,23 +148,54 @@ class Trainer:
         while state.epoch < self.epochs:
             t0 = time.time()
             train_loss, n_batches = 0.0, 0
-            # Prefetch keeps the next batch on device while the (async
-            # dispatched) step runs; loader_state is the bit-exact resume
-            # point for the batch being trained, since the loader itself has
-            # run ahead by the prefetch depth.
-            for batch, loader_state in DevicePrefetcher(train_loader):
-                state.params, state.opt_state, loss = step_fn(
-                    state.params, state.opt_state, batch)
-                train_loss += float(loss)
-                n_batches += 1
-                state.global_step += 1
-                if (self.ckpt and self.checkpoint_every_steps and
-                        state.global_step % self.checkpoint_every_steps == 0):
+            # One jit dispatch per chunk of up to `chunk_batches` steps; the
+            # previous chunk's on-device (n,) loss array is drained while the
+            # current chunk runs, so the host never blocks on the step it
+            # just dispatched. loader_state is the bit-exact resume point
+            # after the chunk's last batch (the loader itself has run ahead
+            # by the prefetch depth).
+            pending_losses = None
+            stop = False
+
+            def drain(losses):
+                # Per-element accumulation into the python float keeps the
+                # sum bit-identical to the historical one-float(loss)-per-
+                # step loop (a vectorized f32 sum would not).
+                nonlocal train_loss
+                for loss in np.asarray(losses):
+                    train_loss += float(loss)
+
+            for chunk, loader_state, n in DevicePrefetcher(
+                    train_loader, chunk_batches=engine.chunk_batches,
+                    device=engine.batch_sharding()):
+                state.params, state.opt_state, losses = engine.step(
+                    state.params, state.opt_state, chunk)
+                if pending_losses is not None:
+                    drain(pending_losses)
+                pending_losses = losses
+                n_batches += n
+                prev_step = state.global_step
+                state.global_step += n
+                every = self.checkpoint_every_steps
+                if (self.ckpt and every and
+                        prev_step // every < state.global_step // every):
                     self._save(state, train_loader, loader_state)
                 if preempt and preempt.should_stop:
-                    self._save(state, train_loader, loader_state)
-                    self.log_fn("[trainer] preempted; checkpoint written")
-                    return history
+                    if self.ckpt:
+                        self._save(state, train_loader, loader_state)
+                        self.log_fn("[trainer] preempted; checkpoint written")
+                    else:
+                        self.log_fn("[trainer] preempted; no checkpoint_dir "
+                                    "configured — stopping without saving")
+                    stop = True
+                    break
+            if pending_losses is not None:
+                drain(pending_losses)
+            if stop:
+                # preempted: leave _final_state usable (test() after a
+                # preempted train must not crash) and hand back history
+                self._final_state = state
+                return history
             state.epoch += 1
             record = {
                 "epoch": state.epoch,
@@ -153,10 +221,26 @@ class Trainer:
         return history
 
     def evaluate(self, model, params, loader, per_rank: bool = False):
-        metrics = self.metrics_factory()
-        eval_step = self._make_eval_step(model, metrics)
+        metrics, eval_step = self._get_eval_step(model)
+        # On a mesh, shard full eval batches over the data axes so
+        # validation scales with the mesh; only a batch the data axes do
+        # not divide (the drop_last=False tail) falls back to replication.
+        device = None
+        if self.mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec
+
+            from repro.distrib.shardings import batch_spec, data_parallel_size
+
+            dp = data_parallel_size(self.mesh)
+            split = NamedSharding(self.mesh, batch_spec(self.mesh,
+                                                        extra_dims=0))
+            replicated = NamedSharding(self.mesh, PartitionSpec())
+
+            def device(batch):
+                rows = next(iter(batch.values())).shape[0]
+                return split if rows % dp == 0 else replicated
         m_state = None
-        for batch, _ in DevicePrefetcher(loader):
+        for batch, _ in DevicePrefetcher(loader, device=device):
             if m_state is None:
                 m_state = metrics.init_state(batch["positions"].shape[1])
             m_state = eval_step(params, m_state, batch)
@@ -164,10 +248,15 @@ class Trainer:
             raise ValueError(
                 "evaluation loader produced no batches — dataset smaller than "
                 "batch_size with drop_last=True? Pass drop_last=False.")
-        out = {k: float(v) for k, v in metrics.compute(m_state).items()}
+        # Metric state stayed on device for the whole pass; one blocking
+        # device_get fetches every final scalar (and per-rank vector) at once.
+        finals = metrics.compute(m_state)
+        per = metrics.compute_per_rank(m_state) if per_rank else None
+        finals, per = jax.device_get((finals, per))
+        out = {k: float(v) for k, v in finals.items()}
         if per_rank:
             out["per_rank"] = {k: np.asarray(v).tolist()
-                               for k, v in metrics.compute_per_rank(m_state).items()}
+                               for k, v in per.items()}
         return out
 
     def test(self, model, test_loader, params=None, per_rank: bool = True):
