@@ -1,0 +1,168 @@
+"""Vmapped multi-replica sweeps vs sequential runs: aggregate throughput.
+
+A seed/lr sweep of R classic click-model runs pays R full training loops —
+R× the jit dispatches, R× the tiny-BLAS launches — even though every run
+consumes the identical batch stream. ``TrainEngine(replicas=R)`` stacks the
+R runs on a vmapped leading axis inside the scan-jitted chunk step, so one
+dispatch stream advances all R runs with batched BLAS.
+
+Measures steps/sec·replica (optimizer steps × replicas / wall seconds)
+through the real engine path (loader -> chunked DevicePrefetcher -> scanned
+step) for R sequential single-run engines vs one vmapped R-replica engine,
+interleaved best-of-``--reps``. Replica i of the vmapped run computes the
+same math as sequential run i (pinned to 1e-5 by tests/test_sweep.py), so
+this benchmark tracks pure dispatch/batching efficiency.
+
+Writes BENCH_sweep.json next to this file (or --out) so the sweep
+throughput trajectory is recorded per PR.
+
+Run: PYTHONPATH=src python benchmarks/bench_sweep.py [--sessions 60000]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+# Allow running without PYTHONPATH=src.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+from repro import optim  # noqa: E402
+from repro.core import PositionBasedModel  # noqa: E402
+from repro.data import (ClickLogLoader, DevicePrefetcher, SyntheticConfig,  # noqa: E402
+                        generate_click_log)
+from repro.train import TrainEngine  # noqa: E402
+
+
+def make_setup(args):
+    cfg = SyntheticConfig(n_sessions=args.sessions,
+                          n_queries=max(args.sessions // 200, 10),
+                          docs_per_query=20, positions=10, behavior="pbm",
+                          seed=0)
+    data, _ = generate_click_log(cfg)
+    return cfg, data
+
+
+def _model(cfg):
+    return PositionBasedModel(query_doc_pairs=cfg.n_query_doc_pairs,
+                              positions=cfg.positions, init_prob=0.2)
+
+
+def run_sequential(cfg, data, args, replicas):
+    """R independent engine runs back to back — today's sweep workflow."""
+    runs = []
+    for i in range(replicas):
+        model = _model(cfg)
+        engine = TrainEngine(model, optim.adamw(args.lr),
+                             chunk_batches=args.chunk)
+        params = model.init(jax.random.PRNGKey(i))
+        runs.append([engine, params, engine.init_opt_state(params)])
+
+    def epoch():
+        n = 0
+        t0 = time.perf_counter()
+        for run in runs:
+            engine, params, opt_state = run
+            loader = ClickLogLoader(data, batch_size=args.batch, seed=0)
+            for chunk_arr, _, m in DevicePrefetcher(
+                    loader, chunk_batches=args.chunk):
+                params, opt_state, losses = engine.step(params, opt_state,
+                                                        chunk_arr)
+                n += m
+            run[1], run[2] = params, opt_state
+        jax.block_until_ready(runs[-1][1])
+        return n, time.perf_counter() - t0  # n already counts all replicas
+
+    return epoch
+
+
+def run_vmapped(cfg, data, args, replicas):
+    model = _model(cfg)
+    engine = TrainEngine(model, optim.adamw(args.lr),
+                         chunk_batches=args.chunk, replicas=replicas)
+    params = engine.init_replica_params(np.arange(replicas))
+    opt_state = engine.init_opt_state(params)
+
+    def epoch():
+        nonlocal params, opt_state
+        n = 0
+        t0 = time.perf_counter()
+        loader = ClickLogLoader(data, batch_size=args.batch, seed=0)
+        for chunk_arr, _, m in DevicePrefetcher(
+                loader, chunk_batches=args.chunk):
+            params, opt_state, losses = engine.step(params, opt_state,
+                                                    chunk_arr)
+            n += m * replicas
+        jax.block_until_ready(params)
+        return n, time.perf_counter() - t0
+
+    return epoch
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sessions", type=int, default=60_000)
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--chunk", type=int, default=8)
+    ap.add_argument("--replicas", type=int, nargs="+", default=[4, 8])
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--out", default=os.path.join(os.path.dirname(__file__),
+                                                  "BENCH_sweep.json"))
+    args = ap.parse_args()
+
+    cfg, data = make_setup(args)
+    variants = {}
+    for r in args.replicas:
+        variants[f"sequential_x{r}"] = run_sequential(cfg, data, args, r)
+        variants[f"vmapped_x{r}"] = run_vmapped(cfg, data, args, r)
+
+    # Warm every variant (compiles full + partial chunk shapes), then time
+    # interleaved so machine noise hits all variants alike.
+    for epoch in variants.values():
+        epoch()
+    best = {name: float("inf") for name in variants}
+    steps = {}
+    for _ in range(args.reps):
+        for name, epoch in variants.items():
+            n, sec = epoch()
+            steps[name] = n
+            best[name] = min(best[name], sec)
+
+    results = {name: {"replica_steps": steps[name], "seconds": best[name],
+                      "replica_steps_per_s": steps[name] / best[name]}
+               for name in variants}
+    for name, r in results.items():
+        print(f"[bench_sweep] {name:16s} {r['replica_steps']:5d} "
+              f"replica-steps in {r['seconds']:.3f}s  "
+              f"({r['replica_steps_per_s']:.1f} steps/s*replica)")
+
+    speedups = {}
+    for r in args.replicas:
+        speedups[f"x{r}"] = (results[f"vmapped_x{r}"]["replica_steps_per_s"]
+                             / results[f"sequential_x{r}"]["replica_steps_per_s"])
+        print(f"[bench_sweep] R={r}: vmapped sweep {speedups[f'x{r}']:.2f}x "
+              f"the aggregate throughput of {r} sequential runs")
+    out = {
+        "sessions": args.sessions,
+        "batch": args.batch,
+        "chunk_batches": args.chunk,
+        "positions": cfg.positions,
+        "query_doc_pairs": cfg.n_query_doc_pairs,
+        "reps": args.reps,
+        "results": results,
+        "speedup_vmapped_vs_sequential": speedups,
+    }
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"[bench_sweep] wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -106,8 +106,17 @@ class MultiMetric:
     def __init__(self, metrics: Dict[str, object]):
         self.metrics = dict(metrics)
 
-    def init_state(self, positions: int):
-        return {name: m.init_state(positions) for name, m in self.metrics.items()}
+    def init_state(self, positions: int, replicas: int = None):
+        """Fresh accumulator state; with ``replicas=R`` every leaf gains a
+        leading replica axis so one ``jax.vmap``-ed update call advances R
+        independent evaluations (the sweep engine's vmapped eval step).
+        Stacked states must be reduced with ``jax.vmap(self.compute)``."""
+        state = {name: m.init_state(positions)
+                 for name, m in self.metrics.items()}
+        if replicas is None:
+            return state
+        return jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (replicas,) + x.shape), state)
 
     def update(self, state, **kwargs):
         out = {}

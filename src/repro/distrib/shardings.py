@@ -61,15 +61,24 @@ def make_shardings(mesh, tree: Any, rule: Callable[[tuple, Any], P]):
     return jax.tree_util.tree_map_with_path(to_sharding, tree)
 
 
-def clax_param_rule(mesh, min_rows_to_shard: int = 1 << 16):
+def clax_param_rule(mesh, min_rows_to_shard: int = 1 << 16,
+                    leading_axes: int = 0):
     """Sharding rule for CLAX/recsys params: big tables row-sharded over
-    'model', everything else replicated (dense towers are tiny)."""
+    'model', everything else replicated (dense towers are tiny).
+
+    ``leading_axes=k`` skips k leading dims before the row-count test and
+    leaves them replicated — e.g. the ``(R,)`` replica axis of a vmapped
+    sweep (every replica's table shards identically over 'model' while the
+    replica axis stays replicated, composing with the data-sharded batch).
+    """
     model_size = mesh.shape[MODEL_AXIS]
 
     def rule(path, leaf):
-        if leaf.ndim >= 1 and leaf.shape[0] >= min_rows_to_shard \
-                and leaf.shape[0] % model_size == 0:
-            return P(MODEL_AXIS, *([None] * (leaf.ndim - 1)))
+        row_dim = leading_axes
+        if leaf.ndim >= row_dim + 1 and leaf.shape[row_dim] >= min_rows_to_shard \
+                and leaf.shape[row_dim] % model_size == 0:
+            return P(*([None] * row_dim), MODEL_AXIS,
+                     *([None] * (leaf.ndim - row_dim - 1)))
         return P()
 
     return rule

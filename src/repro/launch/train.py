@@ -22,7 +22,9 @@ flags at all.
 Training-engine knobs (see README "Training engine"): ``--chunk-batches N``
 fuses N optimizer steps into one scan-jitted dispatch, ``--data-parallel``
 shards the batch axis over all local devices, ``--sparse-tables`` switches
-embedding tables to lazy-AdamW scatter updates.
+embedding tables to lazy-AdamW scatter updates. Sweep knobs (README
+"Sweeps"): ``--replicas R`` trains R seed/lr variants in one vmapped run,
+with ``--replica-seeds`` / ``--replica-lrs`` setting the per-replica knobs.
 
 Single-host here; at pod scale the same entry point runs per host with
 --host-id/--host-count carving the data shard (rows of the in-memory dict,
@@ -130,6 +132,15 @@ def main():
                     help="lazy-AdamW scatter updates for embedding tables: "
                          "optimizer state traffic O(unique batch rows) "
                          "instead of O(table rows)")
+    ap.add_argument("--replicas", type=int, default=None,
+                    help="train R independent replicas in one vmapped sweep "
+                         "(R x params/opt-state memory, 1x data; one scan "
+                         "dispatch advances all runs)")
+    ap.add_argument("--replica-lrs", type=float, nargs="+", default=None,
+                    help="one learning rate per replica (default: --lr for "
+                         "all); switches the optimizer to inject_lr=True")
+    ap.add_argument("--replica-seeds", type=int, nargs="+", default=None,
+                    help="one init seed per replica (default: --seed + i)")
     args = ap.parse_args()
     if args.ingest and not args.store_dir:
         ap.error("--ingest requires --store-dir")
@@ -137,6 +148,16 @@ def main():
         # fail before a potentially hours-long ingest, not inside train()
         ap.error("--sparse-tables does not support quotient_remainder "
                  "compression (two coupled tables, no single row-id stream)")
+    if args.replicas is None and (args.replica_lrs or args.replica_seeds):
+        ap.error("--replica-lrs/--replica-seeds require --replicas")
+    for name, knob in (("--replica-lrs", args.replica_lrs),
+                       ("--replica-seeds", args.replica_seeds)):
+        if knob is not None and len(knob) != args.replicas:
+            ap.error(f"{name} needs exactly --replicas {args.replicas} values")
+    if args.replica_lrs and args.sparse_tables:
+        ap.error("--replica-lrs is not supported with --sparse-tables (the "
+                 "lazy-AdamW lr is a static hyperparameter shared by all "
+                 "replicas); per-seed sweeps (--replica-seeds) are fine")
 
     mesh = None
     if args.data_parallel:
@@ -157,7 +178,9 @@ def main():
         positions=data_cfg.positions,
         attraction=attraction)
 
-    trainer = Trainer(optimizer=optim.adamw(args.lr, weight_decay=1e-4),
+    optimizer = optim.adamw(args.lr, weight_decay=1e-4,
+                            inject_lr=args.replica_lrs is not None)
+    trainer = Trainer(optimizer=optimizer,
                       epochs=args.epochs, patience=1,
                       checkpoint_dir=args.ckpt_dir,
                       checkpoint_every_steps=200 if args.ckpt_dir else None,
@@ -166,11 +189,21 @@ def main():
                       sparse_tables=args.sparse_tables,
                       # must mirror the dense optimizer above — the sparse
                       # path cannot introspect the transformation chain
-                      sparse_table_kwargs=dict(lr=args.lr, weight_decay=1e-4))
+                      sparse_table_kwargs=dict(lr=args.lr, weight_decay=1e-4),
+                      replicas=args.replicas,
+                      replica_lrs=args.replica_lrs,
+                      replica_seeds=args.replica_seeds,
+                      seed=args.seed)
     trainer.train(model, train_loader, val_loader, resume=bool(args.ckpt_dir))
     results = trainer.test(model, test_loader)
-    print("[train] test:", {k: round(v, 4) for k, v in results.items()
-                            if k != "per_rank"})
+    if args.replicas is None:
+        print("[train] test:", {k: round(v, 4) for k, v in results.items()
+                                if k != "per_rank"})
+    else:
+        for i in range(args.replicas):
+            print(f"[train] test replica {i}:",
+                  {k: round(v[i], 4) for k, v in results.items()
+                   if k != "per_rank"})
 
 
 if __name__ == "__main__":

@@ -129,20 +129,24 @@ def add_decayed_weights(weight_decay: float) -> GradientTransformation:
 
 
 def adam(learning_rate, b1=0.9, b2=0.999, eps=1e-8,
-         moment_dtype=jnp.float32) -> GradientTransformation:
+         moment_dtype=jnp.float32, inject_lr: bool = False
+         ) -> GradientTransformation:
     return chain(scale_by_adam(b1, b2, eps, moment_dtype),
-                 _scale_by_lr(learning_rate))
+                 _scale_by_lr(learning_rate, inject=inject_lr))
 
 
 def adamw(learning_rate, b1=0.9, b2=0.999, eps=1e-8, weight_decay=1e-4,
-          moment_dtype=jnp.float32) -> GradientTransformation:
+          moment_dtype=jnp.float32, inject_lr: bool = False
+          ) -> GradientTransformation:
     """AdamW (decoupled weight decay) — the paper's default optimizer.
 
     ``moment_dtype=bf16`` halves optimizer-state memory for 400B-class runs
-    (updates still computed in fp32)."""
+    (updates still computed in fp32). ``inject_lr=True`` stores the lr in
+    the optimizer state (see :class:`InjectLRState`) so vmapped replica
+    sweeps can run one lr per replica."""
     return chain(scale_by_adam(b1, b2, eps, moment_dtype),
                  add_decayed_weights(weight_decay),
-                 _scale_by_lr(learning_rate))
+                 _scale_by_lr(learning_rate, inject=inject_lr))
 
 
 class ScaleByAdagradState(NamedTuple):
@@ -187,7 +191,74 @@ def sgd(learning_rate, momentum: float = 0.0, nesterov: bool = False) -> Gradien
     return chain(GradientTransformation(init, update), _scale_by_lr(learning_rate))
 
 
-def _scale_by_lr(learning_rate) -> GradientTransformation:
+class InjectLRState(NamedTuple):
+    """Learning rate carried as optimizer *state* instead of a baked-in
+    constant — the injected-hyperparam pattern (optax.inject_hyperparams).
+
+    Because ``lr`` is a traced leaf, ``jax.vmap`` over a stacked state gives
+    every replica of a sweep its own learning rate inside one compiled
+    update, and :func:`set_injected_lr` can retune a run without retracing.
+    """
+    lr: jax.Array
+
+
+def inject_lr(learning_rate: float) -> GradientTransformation:
+    """Like ``scale(-learning_rate)`` but with the lr as a state leaf."""
+    if callable(learning_rate):
+        raise ValueError("inject_lr takes a constant, not a schedule — "
+                         "compose scale_by_schedule for scheduled lrs")
+
+    def init(params):
+        del params
+        return InjectLRState(lr=jnp.asarray(learning_rate, jnp.float32))
+
+    def update(grads, state, params=None):
+        del params
+        return _tree_map(lambda g: g * (-state.lr), grads), state
+
+    return GradientTransformation(init, update)
+
+
+def _is_inject_state(node) -> bool:
+    return isinstance(node, InjectLRState)
+
+
+def set_injected_lr(opt_state, lr):
+    """Replace the lr of every :class:`InjectLRState` leaf in ``opt_state``.
+
+    ``lr`` may be a scalar or an array (e.g. an ``(R,)`` vector over the
+    stacked replica axis of a vmapped sweep state). Raises if the optimizer
+    was not built with ``inject_lr=True`` — silently returning the input
+    would quietly train every replica at the constructor lr.
+    """
+    found = []
+
+    def visit(node):
+        if _is_inject_state(node):
+            found.append(node)
+            return InjectLRState(lr=jnp.asarray(lr, jnp.float32))
+        return node
+
+    out = jax.tree_util.tree_map(visit, opt_state, is_leaf=_is_inject_state)
+    if not found:
+        raise ValueError(
+            "optimizer state has no InjectLRState — build the optimizer "
+            "with inject_lr=True (e.g. optim.adamw(lr, inject_lr=True)) "
+            "to set per-run learning rates")
+    return out
+
+
+def get_injected_lr(opt_state):
+    """The lr array of the first InjectLRState leaf, or None."""
+    for node in jax.tree_util.tree_leaves(opt_state, is_leaf=_is_inject_state):
+        if _is_inject_state(node):
+            return node.lr
+    return None
+
+
+def _scale_by_lr(learning_rate, inject: bool = False) -> GradientTransformation:
+    if inject:
+        return inject_lr(learning_rate)
     if callable(learning_rate):
         return scale_by_schedule(lambda count: -learning_rate(count))
     return scale(-learning_rate)

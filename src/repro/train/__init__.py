@@ -2,7 +2,8 @@
 tolerance."""
 from repro.train.trainer import Trainer, TrainState
 from repro.train.engine import TrainEngine, discover_sparse_tables
-from repro.train.checkpoints import CheckpointManager
+from repro.train.checkpoints import (CheckpointManager, select_replica,
+                                     stack_replicas)
 from repro.train.fault_tolerance import PreemptionHandler, drop_slowest_aggregate
 
 __all__ = [
@@ -11,6 +12,8 @@ __all__ = [
     "TrainEngine",
     "discover_sparse_tables",
     "CheckpointManager",
+    "select_replica",
+    "stack_replicas",
     "PreemptionHandler",
     "drop_slowest_aggregate",
 ]

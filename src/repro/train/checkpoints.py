@@ -21,9 +21,28 @@ import tempfile
 from typing import Any, Dict, Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 COMMIT_MARKER = "COMMIT"
+
+
+def select_replica(tree, index: int):
+    """Slice replica ``index`` out of an R-stacked pytree (params, opt-state,
+    or a whole restored checkpoint tree): every leaf loses its leading
+    replica axis. The result is shaped exactly like a single sequential
+    run's state, so any replica of a sweep checkpoint resumes or tests
+    standalone."""
+    return jax.tree_util.tree_map(lambda x: x[index], tree)
+
+
+def stack_replicas(trees):
+    """Inverse of :func:`select_replica`: stack per-replica pytrees (e.g.
+    checkpoints of R independent sequential runs) into one R-stacked tree a
+    ``TrainEngine(replicas=R)`` sweep can resume from."""
+    if not trees:
+        raise ValueError("stack_replicas needs at least one tree")
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
 
 
 def _flatten_with_paths(tree):

@@ -27,12 +27,28 @@ them one at a time. The engine replaces it with a chunked execution core:
   trainer's dense optimizer. Requires explicit hyperparameters
   (``sparse_table_kwargs``) because gradient-transformation chains cannot
   be introspected; lr schedules are not supported on the sparse side.
+* **Replica sweeps** — ``TrainEngine(replicas=R)`` stacks R independent
+  training runs on a leading replica axis of ``(params, opt_state)`` and
+  ``jax.vmap``s the per-batch step over that axis while the data chunk is
+  broadcast: one ``lax.scan`` dispatch advances all R runs per chunk with
+  batched BLAS, so an R-way seed/lr sweep costs ~1 run of dispatch
+  overhead instead of R. Per-replica seeds come from
+  :meth:`TrainEngine.init_replica_params`; per-replica learning rates ride
+  in the optimizer state via ``optim.adamw(lr, inject_lr=True)`` +
+  :meth:`TrainEngine.set_replica_lrs`. ``step`` takes an optional
+  ``active`` ``(R,)`` mask: inactive replicas' params/opt-state are frozen
+  in place (per-replica early stopping without retracing the compiled
+  step). Per-step losses come back as an ``(n, R)`` device array.
+  Memory cost is R× params/opt-state but 1× data. The ``replicas=None``
+  path is byte-for-byte the PR-4 engine (pinned by tests).
 """
 from __future__ import annotations
 
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
 from repro import optim as optim_lib
 from repro.core.parameterization import Compression, EmbeddingParameter
@@ -102,13 +118,17 @@ class TrainEngine:
     def __init__(self, model, optimizer, *, chunk_batches: int = 1,
                  mesh=None, sparse_tables: bool = False,
                  sparse_table_kwargs: Optional[Dict[str, Any]] = None,
-                 loss_fn: Optional[Callable] = None):
+                 loss_fn: Optional[Callable] = None,
+                 replicas: Optional[int] = None):
         if chunk_batches < 1:
             raise ValueError(f"chunk_batches must be >= 1, got {chunk_batches}")
+        if replicas is not None and replicas < 1:
+            raise ValueError(f"replicas must be >= 1, got {replicas}")
         self.model = model
         self.optimizer = optimizer
         self.chunk_batches = int(chunk_batches)
         self.mesh = mesh
+        self.replicas = None if replicas is None else int(replicas)
         self.loss_fn = loss_fn or model.compute_loss
         self.sparse_parts = discover_sparse_tables(model) if sparse_tables else {}
         if self.sparse_parts:
@@ -126,14 +146,20 @@ class TrainEngine:
             self.sparse_kwargs = kwargs
         else:
             self.sparse_kwargs = {}
-        self._step = jax.jit(self._chunk_step, donate_argnums=(0, 1))
+        if self.replicas is None:
+            self._step = jax.jit(self._chunk_step, donate_argnums=(0, 1))
+        else:
+            # Two compiled variants: the all-active fast path skips the
+            # per-leaf freeze select entirely (the whole sweep until the
+            # first replica early-stops), the masked path freezes inactive
+            # replicas in place. `step` picks host-side per call.
+            self._step = jax.jit(self._replica_chunk_step,
+                                 donate_argnums=(0, 1))
+            self._step_masked = jax.jit(self._replica_chunk_step_masked,
+                                        donate_argnums=(0, 1))
 
     # -- optimizer state -------------------------------------------------------
-    def init_opt_state(self, params):
-        """Dense optimizer state, or ``{"dense": ..., "sparse": {...}}`` when
-        table grads are routed through the lazy-AdamW path (table leaves are
-        masked to ``None`` in the dense subtree so dense moments never
-        materialize for them)."""
+    def _init_opt_state_single(self, params):
         if not self.sparse_parts:
             return self.optimizer.init(params)
         dense_params = params
@@ -143,6 +169,57 @@ class TrainEngine:
                 _tree_get(params, path))
             dense_params = _tree_set(dense_params, path, None)
         return {"dense": self.optimizer.init(dense_params), "sparse": sparse}
+
+    def init_opt_state(self, params):
+        """Dense optimizer state, or ``{"dense": ..., "sparse": {...}}`` when
+        table grads are routed through the lazy-AdamW path (table leaves are
+        masked to ``None`` in the dense subtree so dense moments never
+        materialize for them). With ``replicas=R``, ``params`` must carry the
+        leading replica axis (see :meth:`init_replica_params`) and every
+        state leaf comes back R-stacked."""
+        if self.replicas is None:
+            return self._init_opt_state_single(params)
+        return jax.vmap(self._init_opt_state_single)(params)
+
+    # -- replica sweeps --------------------------------------------------------
+    def init_replica_params(self, seeds) -> Any:
+        """Stacked params: replica i initialized from ``PRNGKey(seeds[i])``.
+
+        Replica i's slice is exactly what ``model.init(PRNGKey(seeds[i]))``
+        would produce standalone, so a vmapped sweep run is comparable
+        leaf-for-leaf with a sequential run of the same seed.
+        """
+        if self.replicas is None:
+            raise ValueError("init_replica_params needs TrainEngine(replicas=R)")
+        seeds = jnp.asarray(seeds)
+        if seeds.ndim != 1 or seeds.shape[0] != self.replicas:
+            raise ValueError(f"need exactly {self.replicas} seeds, got "
+                             f"shape {seeds.shape}")
+        keys = jax.vmap(jax.random.PRNGKey)(seeds)
+        return jax.vmap(self.model.init)(keys)
+
+    def set_replica_lrs(self, opt_state, lrs):
+        """Give every replica its own learning rate.
+
+        Requires an optimizer built with ``inject_lr=True`` (the lr must be
+        a state leaf to differ across the vmapped replica axis) and no
+        sparse tables (the lazy-AdamW path takes its lr as a static
+        hyperparameter shared by all replicas).
+        """
+        from repro.optim import set_injected_lr
+
+        if self.replicas is None:
+            raise ValueError("set_replica_lrs needs TrainEngine(replicas=R)")
+        if self.sparse_parts:
+            raise NotImplementedError(
+                "per-replica learning rates are not supported with "
+                "sparse_tables: sparse_table_kwargs['lr'] is a static "
+                "hyperparameter shared across replicas")
+        lrs = jnp.asarray(lrs, jnp.float32)
+        if lrs.shape != (self.replicas,):
+            raise ValueError(f"need exactly {self.replicas} learning rates, "
+                             f"got shape {lrs.shape}")
+        return set_injected_lr(opt_state, lrs)
 
     # -- sharding --------------------------------------------------------------
     def batch_sharding(self):
@@ -172,7 +249,10 @@ class TrainEngine:
             return params, opt_state
         from repro.distrib.shardings import clax_param_rule, make_shardings
 
-        rule = clax_param_rule(self.mesh)
+        # With replicas, every leaf carries a leading (R,) axis that stays
+        # replicated; the row-sharding size test must look one dim deeper.
+        rule = clax_param_rule(self.mesh,
+                               leading_axes=0 if self.replicas is None else 1)
         params = jax.device_put(params, make_shardings(self.mesh, params, rule))
         opt_state = jax.device_put(
             opt_state, make_shardings(self.mesh, opt_state, rule))
@@ -223,11 +303,59 @@ class TrainEngine:
             body, (params, opt_state), chunk)
         return params, opt_state, losses
 
-    def step(self, params, opt_state, chunk):
+    # -- the vmapped replica step ----------------------------------------------
+    def _replica_one_step(self, params, opt_state, batch, active):
+        new_p, new_o, loss = jax.vmap(
+            self._one_step, in_axes=(0, 0, None))(params, opt_state, batch)
+        if active is None:
+            return new_p, new_o, loss
+
+        def keep(new, old):
+            # Freeze inactive replicas in place: expand the (R,) mask to the
+            # leaf rank so params, moments, AND step counts all hold still —
+            # an early-stopped replica's slice stays exactly the state it
+            # stopped at, matching a sequential run that halted there.
+            mask = active.reshape(active.shape + (1,) * (new.ndim - 1))
+            return jnp.where(mask, new, old)
+
+        params = jax.tree_util.tree_map(keep, new_p, params)
+        opt_state = jax.tree_util.tree_map(keep, new_o, opt_state)
+        return params, opt_state, loss
+
+    def _replica_chunk_body(self, params, opt_state, chunk, active):
+        def body(carry, batch):
+            params, opt_state = carry
+            params, opt_state, loss = self._replica_one_step(
+                params, opt_state, batch, active)
+            return (params, opt_state), loss
+
+        (params, opt_state), losses = jax.lax.scan(
+            body, (params, opt_state), chunk)
+        return params, opt_state, losses  # losses: (n, R)
+
+    def _replica_chunk_step(self, params, opt_state, chunk):
+        return self._replica_chunk_body(params, opt_state, chunk, None)
+
+    def _replica_chunk_step_masked(self, params, opt_state, chunk, active):
+        return self._replica_chunk_body(params, opt_state, chunk, active)
+
+    def step(self, params, opt_state, chunk, active=None):
         """One fused dispatch: ``n = chunk.shape[0]`` optimizer steps.
 
         Donates ``(params, opt_state)``; returns the new state plus the
-        ``(n,)`` per-step loss array, still on device — do not block on it
-        before dispatching the next chunk.
+        per-step loss array — ``(n,)``, or ``(n, R)`` with ``replicas=R`` —
+        still on device: do not block on it before dispatching the next
+        chunk.
+
+        With replicas, ``active`` is an optional ``(R,)`` bool mask (default
+        all-on): inactive replicas' state is frozen in place. An all-true
+        (or omitted) mask takes the select-free fast path; a partial mask is
+        a traced argument, so flipping further replicas off never retraces.
         """
-        return self._step(params, opt_state, chunk)
+        if self.replicas is None:
+            if active is not None:
+                raise ValueError("active mask requires TrainEngine(replicas=R)")
+            return self._step(params, opt_state, chunk)
+        if active is None or bool(np.asarray(active).all()):
+            return self._step(params, opt_state, chunk)
+        return self._step_masked(params, opt_state, chunk, jnp.asarray(active))

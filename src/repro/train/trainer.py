@@ -9,11 +9,22 @@ Implements: chunked scan-jitted update steps through
 per ``chunk_batches`` steps; per-step losses accumulate on device and are
 fetched one chunk behind the dispatch), optional data-parallel execution
 over a mesh and sparse embedding-table updates, per-epoch validation with
-the paper's click metrics (compiled eval step cached across epochs, one
-host transfer per evaluate call), early stopping after the first epoch
-without val-loss improvement (paper §6), periodic + preemption-triggered
-atomic checkpoints at chunk granularity, and bit-exact resume (params +
-optimizer + loader state + epoch counter).
+the paper's click metrics (compiled eval step cached LRU across epochs and
+models, scanned over prefetched chunks, one host transfer per evaluate
+call), early stopping after the first epoch without val-loss improvement
+(paper §6), periodic + preemption-triggered atomic checkpoints at chunk
+granularity, and bit-exact resume (params + optimizer + loader state +
+epoch counter).
+
+Sweep mode (``Trainer(replicas=R)``): R independent runs — distinct init
+seeds always (``replica_seeds``, default ``seed + i``), distinct learning
+rates optionally (``replica_lrs``, requires an ``inject_lr=True``
+optimizer) — train inside one vmapped engine. Validation runs one compiled
+step over an R-stacked metric state, early stopping is tracked per replica
+(finished replicas freeze in place via the engine's active mask while the
+rest keep training), history records carry per-replica lists, and
+checkpoints hold the R-stacked trees (`repro.train.select_replica`
+extracts any run for standalone resume/test).
 """
 from __future__ import annotations
 
@@ -59,7 +70,10 @@ class Trainer:
                  chunk_batches: int = 1,
                  mesh=None,
                  sparse_tables: bool = False,
-                 sparse_table_kwargs: Optional[Dict[str, Any]] = None):
+                 sparse_table_kwargs: Optional[Dict[str, Any]] = None,
+                 replicas: Optional[int] = None,
+                 replica_lrs: Optional[List[float]] = None,
+                 replica_seeds: Optional[List[int]] = None):
         self.optimizer = optimizer
         self.epochs = epochs
         self.patience = patience
@@ -74,18 +88,32 @@ class Trainer:
         self.mesh = mesh
         self.sparse_tables = sparse_tables
         self.sparse_table_kwargs = sparse_table_kwargs
-        # Compiled eval step per model: _make_eval_step used to be re-jitted
-        # (a fresh trace + compile) on every evaluate() call — epochs 2..n
-        # now reuse the cached (metrics, compiled step) pair.
+        if replicas is None and (replica_lrs is not None
+                                 or replica_seeds is not None):
+            raise ValueError("replica_lrs/replica_seeds require replicas=R")
+        for name, knob in (("replica_lrs", replica_lrs),
+                           ("replica_seeds", replica_seeds)):
+            if knob is not None and len(knob) != replicas:
+                raise ValueError(f"{name} has {len(knob)} entries for "
+                                 f"replicas={replicas}")
+        self.replicas = replicas
+        self.replica_lrs = replica_lrs
+        self.replica_seeds = replica_seeds
+        # Compiled eval step per (model, replicas): _make_eval_step used to
+        # be re-jitted (a fresh trace + compile) on every evaluate() call —
+        # repeat evaluations reuse the cached (metrics, compiled steps)
+        # entry. The cache is LRU (move-to-end on hit, evict front): the
+        # model being evaluated every epoch survives a >4-model sweep.
         self._eval_cache: Dict[Any, tuple] = {}
 
     def _make_engine(self, model) -> TrainEngine:
         return TrainEngine(model, self.optimizer,
                            chunk_batches=self.chunk_batches, mesh=self.mesh,
                            sparse_tables=self.sparse_tables,
-                           sparse_table_kwargs=self.sparse_table_kwargs)
+                           sparse_table_kwargs=self.sparse_table_kwargs,
+                           replicas=self.replicas)
 
-    def _make_eval_step(self, model, metrics):
+    def _eval_update_fn(self, model, metrics, replicas=None):
         def eval_step(params, state, batch):
             log_probs = model.predict_clicks(params, batch)
             cond = model.predict_conditional_clicks(params, batch)
@@ -93,34 +121,75 @@ class Trainer:
                                   conditional_log_probs=cond,
                                   clicks=batch["clicks"], where=batch["mask"])
 
-        return jax.jit(eval_step)
+        if replicas is None:
+            return eval_step
+        # R-stacked (params, metric state), one broadcast batch: a single
+        # compiled step advances every replica's evaluation.
+        return jax.vmap(eval_step, in_axes=(0, 0, None))
 
-    def _get_eval_step(self, model):
-        if model not in self._eval_cache:
-            # bounded: a trainer reused across a sweep of models must not
-            # pin every model's metrics + compiled executable forever
-            while len(self._eval_cache) >= 4:
-                self._eval_cache.pop(next(iter(self._eval_cache)))
-            metrics = self.metrics_factory()
-            self._eval_cache[model] = (metrics,
-                                       self._make_eval_step(model, metrics))
-        return self._eval_cache[model]
+    def _make_eval_step(self, model, metrics, replicas=None):
+        return jax.jit(self._eval_update_fn(model, metrics, replicas))
+
+    def _make_eval_chunk_step(self, model, metrics, replicas=None):
+        """Scanned eval step over a stacked ``(n, B, ...)`` chunk: one jit
+        dispatch per ``chunk_batches`` eval batches, metric state as the
+        scan carry (loss-free analogue of the training engine's chunk
+        step)."""
+        update = self._eval_update_fn(model, metrics, replicas)
+
+        def chunk_step(params, state, chunk):
+            def body(state, batch):
+                return update(params, state, batch), None
+
+            state, _ = jax.lax.scan(body, state, chunk)
+            return state
+
+        return jax.jit(chunk_step)
+
+    def _get_eval_step(self, model, replicas=None):
+        key = (model, replicas)
+        if key in self._eval_cache:
+            # LRU hit: move to the back of the eviction order.
+            self._eval_cache[key] = self._eval_cache.pop(key)
+            return self._eval_cache[key]
+        # bounded: a trainer reused across a sweep of models must not
+        # pin every model's metrics + compiled executable forever
+        while len(self._eval_cache) >= 4:
+            self._eval_cache.pop(next(iter(self._eval_cache)))
+        metrics = self.metrics_factory()
+        self._eval_cache[key] = (metrics,
+                                 self._make_eval_step(model, metrics, replicas),
+                                 self._make_eval_chunk_step(model, metrics,
+                                                            replicas))
+        return self._eval_cache[key]
 
     # -- public API ----------------------------------------------------------------
     def train(self, model, train_loader, val_loader=None,
               state: Optional[TrainState] = None,
               resume: bool = False) -> List[Dict[str, float]]:
         engine = self._make_engine(model)
+        R = self.replicas
         if state is None:
-            params = model.init(jax.random.PRNGKey(self.seed))
-            state = TrainState(params=params,
-                               opt_state=engine.init_opt_state(params))
+            if R is None:
+                params = model.init(jax.random.PRNGKey(self.seed))
+                opt_state = engine.init_opt_state(params)
+            else:
+                seeds = (self.replica_seeds if self.replica_seeds is not None
+                         else [self.seed + i for i in range(R)])
+                params = engine.init_replica_params(seeds)
+                opt_state = engine.init_opt_state(params)
+                if self.replica_lrs is not None:
+                    opt_state = engine.set_replica_lrs(opt_state,
+                                                       self.replica_lrs)
+            state = TrainState(params=params, opt_state=opt_state)
+        resumed_early_stop = None
         if resume and self.ckpt and self.ckpt.latest_step() is not None:
             tree = {"params": state.params, "opt_state": state.opt_state}
             tree, aux, _ = self.ckpt.restore(like=tree)
             state = TrainState(params=tree["params"], opt_state=tree["opt_state"],
                                epoch=int(aux["epoch"]),
                                global_step=int(aux["global_step"]))
+            resumed_early_stop = aux.get("early_stop")
             if aux.get("loader") is not None and hasattr(train_loader,
                                                          "load_state_dict"):
                 train_loader.load_state_dict(aux["loader"])
@@ -142,34 +211,81 @@ class Trainer:
 
         preempt = PreemptionHandler() if self.handle_preemption else None
         history: List[Dict[str, float]] = []
-        best_val = float("inf")
-        bad_epochs = 0
+        if R is None:
+            best_val = float("inf")
+            bad_epochs = 0
+        else:
+            # Per-replica early-stopping state: a replica that exhausts its
+            # patience goes inactive — the engine's update mask freezes its
+            # params/opt-state in place while the others keep training, so
+            # the single compiled step never retraces.
+            best_val = np.full(R, np.inf)
+            bad_epochs = np.zeros(R, dtype=int)
+            active = np.ones(R, dtype=bool)
+        if resumed_early_stop is not None:
+            # Without this a resumed sweep would reactivate already-stopped
+            # replicas (breaking the freeze-in-place == sequential-run
+            # guarantee) and a resumed scalar run would forget its patience
+            # counter.
+            if R is None:
+                best_val = float(resumed_early_stop["best_val"])
+                bad_epochs = int(resumed_early_stop["bad_epochs"])
+            else:
+                best_val = np.asarray(resumed_early_stop["best_val"],
+                                      np.float64)
+                bad_epochs = np.asarray(resumed_early_stop["bad_epochs"], int)
+                active = np.asarray(resumed_early_stop["active"], bool)
+
+        def snapshot_early_stop():
+            # JSON-able early-stop state for checkpoint aux. Counters only
+            # move at epoch boundaries, so a mid-epoch checkpoint correctly
+            # carries the state the epoch started with.
+            if R is None:
+                self._early_stop_aux = {"best_val": best_val,
+                                        "bad_epochs": bad_epochs}
+            else:
+                self._early_stop_aux = {"best_val": best_val.tolist(),
+                                        "bad_epochs": bad_epochs.tolist(),
+                                        "active": active.tolist()}
+
+        snapshot_early_stop()
 
         while state.epoch < self.epochs:
             t0 = time.time()
-            train_loss, n_batches = 0.0, 0
+            n_batches = 0
+            train_loss = 0.0 if R is None else np.zeros(R, np.float64)
+            epoch_active = None if R is None else active.copy()
             # One jit dispatch per chunk of up to `chunk_batches` steps; the
-            # previous chunk's on-device (n,) loss array is drained while the
-            # current chunk runs, so the host never blocks on the step it
-            # just dispatched. loader_state is the bit-exact resume point
-            # after the chunk's last batch (the loader itself has run ahead
-            # by the prefetch depth).
+            # previous chunk's on-device (n,) — or (n, R) — loss array is
+            # drained while the current chunk runs, so the host never blocks
+            # on the step it just dispatched. loader_state is the bit-exact
+            # resume point after the chunk's last batch (the loader itself
+            # has run ahead by the prefetch depth).
             pending_losses = None
             stop = False
 
             def drain(losses):
-                # Per-element accumulation into the python float keeps the
-                # sum bit-identical to the historical one-float(loss)-per-
-                # step loop (a vectorized f32 sum would not).
                 nonlocal train_loss
-                for loss in np.asarray(losses):
-                    train_loss += float(loss)
+                if R is None:
+                    # Per-element accumulation into the python float keeps
+                    # the sum bit-identical to the historical one-
+                    # float(loss)-per-step loop (a vectorized f32 sum would
+                    # not).
+                    for loss in np.asarray(losses):
+                        train_loss += float(loss)
+                else:
+                    train_loss += np.asarray(losses, np.float64).sum(axis=0)
 
             for chunk, loader_state, n in DevicePrefetcher(
                     train_loader, chunk_batches=engine.chunk_batches,
                     device=engine.batch_sharding()):
-                state.params, state.opt_state, losses = engine.step(
-                    state.params, state.opt_state, chunk)
+                if R is None:
+                    state.params, state.opt_state, losses = engine.step(
+                        state.params, state.opt_state, chunk)
+                else:
+                    state.params, state.opt_state, losses = engine.step(
+                        state.params, state.opt_state, chunk,
+                        active=epoch_active)
                 if pending_losses is not None:
                     drain(pending_losses)
                 pending_losses = losses
@@ -197,72 +313,148 @@ class Trainer:
                 self._final_state = state
                 return history
             state.epoch += 1
+            mean_loss = train_loss / max(n_batches, 1)
             record = {
                 "epoch": state.epoch,
-                "train_loss": train_loss / max(n_batches, 1),
+                "train_loss": (mean_loss if R is None else mean_loss.tolist()),
                 "seconds": time.time() - t0,
             }
+            if R is not None:
+                record["active"] = epoch_active.tolist()
             if val_loader is not None:
-                val = self.evaluate(model, state.params, val_loader)
+                val = self.evaluate(model, state.params, val_loader,
+                                    replicas=R)
                 record.update({f"val_{k}": v for k, v in val.items()})
-                val_loss = -val["ll"]
-                if val_loss < best_val - 1e-6:
-                    best_val, bad_epochs = val_loss, 0
+                if R is None:
+                    val_loss = -val["ll"]
+                    if val_loss < best_val - 1e-6:
+                        best_val, bad_epochs = val_loss, 0
+                    else:
+                        bad_epochs += 1
                 else:
-                    bad_epochs += 1
+                    # Same rule as the scalar path, applied elementwise to
+                    # the replicas still training; finished replicas keep
+                    # their counters (their metrics no longer move).
+                    val_loss = -np.asarray(val["ll"], np.float64)
+                    improved = val_loss < best_val - 1e-6
+                    best_val = np.where(improved & active, val_loss, best_val)
+                    bad_epochs = np.where(improved & active, 0,
+                                          bad_epochs + active.astype(int))
             history.append(record)
             self.log_fn(f"[trainer] {record}")
+            # Resolve stopping BEFORE the end-of-epoch checkpoint so the
+            # saved early-stop state (incl. the updated active mask) is the
+            # one the next epoch would train under.
+            stop_now = False
+            if val_loader is not None:
+                if R is None:
+                    stop_now = bad_epochs >= self.patience
+                else:
+                    stopping = active & (bad_epochs >= self.patience)
+                    if stopping.any():
+                        active = active & ~stopping
+                        self.log_fn(
+                            f"[trainer] replicas "
+                            f"{np.flatnonzero(stopping).tolist()} early-stop "
+                            f"at epoch {state.epoch} "
+                            f"({int(active.sum())}/{R} still training)")
+                    stop_now = not active.any()
+            snapshot_early_stop()
             if self.ckpt:
                 self._save(state, train_loader)
-            if val_loader is not None and bad_epochs >= self.patience:
-                self.log_fn(f"[trainer] early stop at epoch {state.epoch}")
+            if stop_now:
+                self.log_fn(f"[trainer] early stop at epoch {state.epoch}"
+                            if R is None else
+                            f"[trainer] all replicas stopped at epoch "
+                            f"{state.epoch}")
                 break
         self._final_state = state
         return history
 
-    def evaluate(self, model, params, loader, per_rank: bool = False):
-        metrics, eval_step = self._get_eval_step(model)
-        # On a mesh, shard full eval batches over the data axes so
-        # validation scales with the mesh; only a batch the data axes do
-        # not divide (the drop_last=False tail) falls back to replication.
-        device = None
-        if self.mesh is not None:
-            from jax.sharding import NamedSharding, PartitionSpec
+    def evaluate(self, model, params, loader, per_rank: bool = False,
+                 replicas: Optional[int] = None):
+        """Stream ``loader`` through the cached compiled eval step.
 
-            from repro.distrib.shardings import batch_spec, data_parallel_size
-
-            dp = data_parallel_size(self.mesh)
-            split = NamedSharding(self.mesh, batch_spec(self.mesh,
-                                                        extra_dims=0))
-            replicated = NamedSharding(self.mesh, PartitionSpec())
-
-            def device(batch):
-                rows = next(iter(batch.values())).shape[0]
-                return split if rows % dp == 0 else replicated
+        Off-mesh with ``chunk_batches > 1``, eval batches ride the same
+        chunked ``DevicePrefetcher`` + scanned step as training (one jit
+        dispatch per chunk, metric state as the scan carry) instead of one
+        dispatch per batch. With ``replicas=R``, ``params`` must be
+        R-stacked and every returned metric is a length-R list.
+        """
+        metrics, eval_step, eval_chunk_step = self._get_eval_step(model,
+                                                                  replicas)
         m_state = None
-        for batch, _ in DevicePrefetcher(loader, device=device):
-            if m_state is None:
-                m_state = metrics.init_state(batch["positions"].shape[1])
-            m_state = eval_step(params, m_state, batch)
+        if self.mesh is None and self.chunk_batches > 1:
+            for chunk, _, _ in DevicePrefetcher(
+                    loader, chunk_batches=self.chunk_batches):
+                if m_state is None:
+                    m_state = metrics.init_state(chunk["positions"].shape[2],
+                                                 replicas=replicas)
+                m_state = eval_chunk_step(params, m_state, chunk)
+        else:
+            # On a mesh, shard full eval batches over the data axes so
+            # validation scales with the mesh; only a batch the data axes do
+            # not divide (the drop_last=False tail) falls back to
+            # replication. (Chunk mode takes one fixed sharding, which the
+            # odd-shaped tail chunk could not satisfy — so mesh eval stays
+            # on the per-batch path.)
+            device = None
+            if self.mesh is not None:
+                from jax.sharding import NamedSharding, PartitionSpec
+
+                from repro.distrib.shardings import (batch_spec,
+                                                     data_parallel_size)
+
+                dp = data_parallel_size(self.mesh)
+                split = NamedSharding(self.mesh, batch_spec(self.mesh,
+                                                            extra_dims=0))
+                replicated = NamedSharding(self.mesh, PartitionSpec())
+
+                def device(batch):
+                    rows = next(iter(batch.values())).shape[0]
+                    return split if rows % dp == 0 else replicated
+            for batch, _ in DevicePrefetcher(loader, device=device):
+                if m_state is None:
+                    m_state = metrics.init_state(batch["positions"].shape[1],
+                                                 replicas=replicas)
+                m_state = eval_step(params, m_state, batch)
         if m_state is None:
             raise ValueError(
                 "evaluation loader produced no batches — dataset smaller than "
                 "batch_size with drop_last=True? Pass drop_last=False.")
         # Metric state stayed on device for the whole pass; one blocking
         # device_get fetches every final scalar (and per-rank vector) at once.
-        finals = metrics.compute(m_state)
-        per = metrics.compute_per_rank(m_state) if per_rank else None
+        if replicas is None:
+            finals = metrics.compute(m_state)
+            per = metrics.compute_per_rank(m_state) if per_rank else None
+        else:
+            finals = jax.vmap(metrics.compute)(m_state)
+            per = (jax.vmap(metrics.compute_per_rank)(m_state)
+                   if per_rank else None)
         finals, per = jax.device_get((finals, per))
-        out = {k: float(v) for k, v in finals.items()}
+        if replicas is None:
+            out = {k: float(v) for k, v in finals.items()}
+        else:
+            out = {k: np.asarray(v, np.float64).tolist()
+                   for k, v in finals.items()}
         if per_rank:
             out["per_rank"] = {k: np.asarray(v).tolist()
                                for k, v in per.items()}
         return out
 
-    def test(self, model, test_loader, params=None, per_rank: bool = True):
+    def test(self, model, test_loader, params=None, per_rank: bool = True,
+             replicas="auto"):
+        """Evaluate on the test split. With no explicit ``params``, the
+        trainer's own final state is used (R-stacked on a sweep trainer, so
+        metrics come back as length-R lists). Explicitly passed ``params``
+        are treated as a single unstacked run — the ``select_replica``
+        workflow — unless ``replicas=R`` says otherwise."""
+        if replicas == "auto":
+            replicas = self.replicas if params is None else None
         if params is None:
             params = self._final_state.params
-        return self.evaluate(model, params, test_loader, per_rank=per_rank)
+        return self.evaluate(model, params, test_loader, per_rank=per_rank,
+                             replicas=replicas)
 
     # -- internals -------------------------------------------------------------------
     def _save(self, state: TrainState, loader, loader_state=None):
@@ -272,4 +464,6 @@ class Trainer:
         self.ckpt.save(state.global_step,
                        {"params": state.params, "opt_state": state.opt_state},
                        aux={"epoch": state.epoch, "global_step": state.global_step,
-                            "loader": loader_state})
+                            "loader": loader_state,
+                            "early_stop": getattr(self, "_early_stop_aux",
+                                                  None)})

@@ -333,9 +333,9 @@ def test_eval_step_compiled_once_across_epochs(pbm_log):
     makes = []
     original = trainer._make_eval_step
 
-    def counting(model_, metrics_):
+    def counting(model_, metrics_, replicas=None):
         makes.append(1)
-        return original(model_, metrics_)
+        return original(model_, metrics_, replicas)
 
     trainer._make_eval_step = counting
     params = model.init(jax.random.PRNGKey(0))

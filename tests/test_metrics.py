@@ -72,6 +72,93 @@ def test_multimetric_routing_and_streaming():
                                    float(mm.compute(once)[key]), rtol=1e-6)
 
 
+def test_multimetric_ignores_inputs_no_metric_requires():
+    """Routing drops unknown inputs: an update carrying extras (e.g. ranking
+    scores alongside click outputs) must not raise or perturb any state."""
+    mm = MultiMetric({"ll": LogLikelihood(), "ppl": Perplexity()})
+    clicks = jnp.asarray([[1.0, 0.0]])
+    lp = jnp.log(jnp.asarray([[0.8, 0.3]]))
+    kwargs = dict(log_probs=lp, conditional_log_probs=lp, clicks=clicks,
+                  where=jnp.ones((1, 2), bool))
+    plain = mm.update(mm.init_state(2), **kwargs)
+    extra = mm.update(mm.init_state(2), scores=jnp.zeros((1, 2)),
+                      labels=jnp.zeros((1, 2)), totally_unknown=object(),
+                      **kwargs)
+    for key in ("ll", "ppl"):
+        np.testing.assert_array_equal(np.asarray(plain[key]["sum"]),
+                                      np.asarray(extra[key]["sum"]))
+        np.testing.assert_array_equal(np.asarray(plain[key]["count"]),
+                                      np.asarray(extra[key]["count"]))
+
+
+def test_multimetric_compute_on_never_updated_state_is_finite():
+    """compute / compute_per_rank on a fresh state must hit the count floor
+    (max(count, 1)), not divide by zero: ll -> 0.0, perplexities -> 2^0."""
+    mm = MultiMetric({"ll": LogLikelihood(), "ppl": Perplexity(),
+                      "cond_ppl": ConditionalPerplexity()})
+    state = mm.init_state(3)
+    finals = {k: float(v) for k, v in mm.compute(state).items()}
+    assert finals == {"ll": 0.0, "ppl": 1.0, "cond_ppl": 1.0}
+    per = mm.compute_per_rank(state)
+    for k, want in (("ll", 0.0), ("ppl", 1.0), ("cond_ppl", 1.0)):
+        arr = np.asarray(per[k])
+        assert arr.shape == (3,)
+        np.testing.assert_array_equal(arr, want)
+        assert np.isfinite(arr).all()
+
+
+def test_multimetric_replica_stacked_state_matches_per_replica():
+    """init_state(replicas=R) + a vmapped update must equal R independent
+    single evaluations, and vmapped compute must reduce per replica (a
+    plain compute would sum across the stacked axis)."""
+    import jax
+
+    mm = MultiMetric({"ll": LogLikelihood(), "ppl": Perplexity()})
+    clicks = jnp.asarray([[1.0, 0.0]])
+    lps = [jnp.log(jnp.asarray([[0.8, 0.3]])),
+           jnp.log(jnp.asarray([[0.6, 0.5]]))]
+
+    def update(state, lp):
+        return mm.update(state, log_probs=lp, conditional_log_probs=lp,
+                         clicks=clicks, where=jnp.ones((1, 2), bool))
+
+    stacked = jax.vmap(update)(mm.init_state(2, replicas=2), jnp.stack(lps))
+    finals = jax.vmap(mm.compute)(stacked)
+    for i, lp in enumerate(lps):
+        single = mm.compute(update(mm.init_state(2), lp))
+        for k in ("ll", "ppl"):
+            np.testing.assert_allclose(float(finals[k][i]), float(single[k]),
+                                       rtol=1e-6)
+
+
+def test_per_rank_output_json_roundtrips_through_trainer_test():
+    """Trainer.test's per_rank payload must survive json round-trips (sweep
+    tooling serializes it): pure python floats/lists, no jnp scalars."""
+    import json
+
+    from repro import optim
+    from repro.core import PositionBasedModel
+    from repro.data import (ClickLogLoader, SyntheticConfig,
+                            generate_click_log, split_sessions)
+    from repro.train import Trainer
+
+    cfg = SyntheticConfig(n_sessions=600, n_queries=10, docs_per_query=8,
+                          positions=4, behavior="pbm", seed=1)
+    data, _ = generate_click_log(cfg)
+    train, _, test = split_sessions(data, (0.8, 0.1, 0.1), seed=0)
+    model = PositionBasedModel(query_doc_pairs=cfg.n_query_doc_pairs,
+                               positions=cfg.positions, init_prob=0.2)
+    trainer = Trainer(optim.adamw(0.05), epochs=1, log_fn=lambda *_: None)
+    trainer.train(model, ClickLogLoader(train, batch_size=128, seed=0))
+    results = trainer.test(model, ClickLogLoader(test, batch_size=64,
+                                                 shuffle=False,
+                                                 drop_last=False))
+    assert set(results["per_rank"]) == {"ll", "ppl", "cond_ppl"}
+    assert all(len(v) == cfg.positions for v in results["per_rank"].values())
+    roundtrip = json.loads(json.dumps(results))
+    assert roundtrip == results
+
+
 def test_dcg_hand_computed():
     scores = jnp.asarray([[0.9, 0.5, 0.1]])
     labels = jnp.asarray([[0, 2, 1]])

@@ -1,0 +1,554 @@
+"""Vmapped multi-replica sweep engine tests: replicas=None bit-exactness,
+vmapped-vs-sequential parity (params, losses, val metrics, early stopping),
+active-mask freezing, stacked checkpoints + select_replica, injected-lr
+plumbing, chunked scanned evaluation, and the LRU eval cache."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.core import PositionBasedModel
+from repro.data import (ClickLogLoader, DevicePrefetcher, SyntheticConfig,
+                        generate_click_log, split_sessions)
+from repro.train import Trainer, TrainEngine, select_replica, stack_replicas
+
+
+@pytest.fixture(scope="module")
+def pbm_log():
+    cfg = SyntheticConfig(n_sessions=2200, n_queries=25, docs_per_query=12,
+                          positions=6, behavior="pbm", seed=13)
+    data, _ = generate_click_log(cfg)
+    train, val, _ = split_sessions(data, (0.8, 0.1, 0.1), seed=0)
+    return cfg, train, val
+
+
+def _model(cfg):
+    return PositionBasedModel(query_doc_pairs=cfg.n_query_doc_pairs,
+                              positions=cfg.positions, init_prob=0.2)
+
+
+def _copy(tree):
+    return jax.tree_util.tree_map(lambda x: jnp.array(np.asarray(x)), tree)
+
+
+def _assert_trees_equal(a, b, msg=""):
+    la = jax.tree_util.tree_leaves_with_path(a)
+    lb = jax.tree_util.tree_leaves_with_path(b)
+    assert len(la) == len(lb)
+    for (ka, va), (_, vb) in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(va), np.asarray(vb),
+                                      err_msg=f"{msg}{ka}")
+
+
+def _assert_trees_close(a, b, atol=1e-5, msg=""):
+    la = jax.tree_util.tree_leaves_with_path(a)
+    lb = jax.tree_util.tree_leaves_with_path(b)
+    assert len(la) == len(lb)
+    for (ka, va), (_, vb) in zip(la, lb):
+        np.testing.assert_allclose(np.asarray(va), np.asarray(vb), atol=atol,
+                                   err_msg=f"{msg}{ka}")
+
+
+def _sequential_engine_run(cfg, data, *, seed, lr, epochs, chunk=4,
+                           batch_size=256):
+    model = _model(cfg)
+    engine = TrainEngine(model, optim.adamw(lr), chunk_batches=chunk)
+    params = model.init(jax.random.PRNGKey(seed))
+    opt_state = engine.init_opt_state(params)
+    loader = ClickLogLoader(data, batch_size=batch_size, seed=5)
+    losses = []
+    for _ in range(epochs):
+        for chunk_arr, _, _ in DevicePrefetcher(loader, chunk_batches=chunk):
+            params, opt_state, l = engine.step(params, opt_state, chunk_arr)
+            losses.extend(np.asarray(l).tolist())
+    return params, opt_state, losses
+
+
+# ---------------------------------------------------------------------------
+# replicas=None regression: the new code path must be byte-for-byte PR 4.
+# ---------------------------------------------------------------------------
+
+def test_no_replica_path_bitexact_with_per_batch_loop(pbm_log):
+    """TrainEngine(replicas=None) — the default — must still reproduce the
+    historical per-batch loop bit-for-bit (the PR-4 guarantee; the heavier
+    chunk-shape matrix lives in tests/test_engine.py)."""
+    cfg, train, _ = pbm_log
+    model = _model(cfg)
+    tx = optim.adamw(0.05)
+    params = model.init(jax.random.PRNGKey(0))
+    opt_state = tx.init(params)
+
+    @jax.jit
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(model.compute_loss)(params, batch)
+        updates, opt_state = tx.update(grads, opt_state, params)
+        return optim.apply_updates(params, updates), opt_state, loss
+
+    loader = ClickLogLoader(train, batch_size=256, seed=5)
+    ref_losses = []
+    for batch in iter(loader):
+        batch = {k: jax.device_put(v) for k, v in batch.items()}
+        params, opt_state, loss = step(params, opt_state, batch)
+        ref_losses.append(float(loss))
+
+    p, o, losses = _sequential_engine_run(cfg, train, seed=0, lr=0.05,
+                                          epochs=1)
+    assert [float(x) for x in losses] == ref_losses
+    _assert_trees_equal(params, p, msg="params ")
+    _assert_trees_equal(opt_state, o, msg="opt_state ")
+
+
+def test_no_replica_step_rejects_active_mask(pbm_log):
+    cfg, train, _ = pbm_log
+    model = _model(cfg)
+    engine = TrainEngine(model, optim.adamw(0.05))
+    params = model.init(jax.random.PRNGKey(0))
+    opt_state = engine.init_opt_state(params)
+    loader = ClickLogLoader(train, batch_size=256, seed=5)
+    chunk, _, _ = next(iter(DevicePrefetcher(loader, chunk_batches=2)))
+    with pytest.raises(ValueError, match="active"):
+        engine.step(params, opt_state, chunk, active=jnp.ones((1,), bool))
+
+
+# ---------------------------------------------------------------------------
+# Vmapped sweep vs sequential runs: per-replica parity.
+# ---------------------------------------------------------------------------
+
+SEEDS = [0, 7, 13, 21]
+LRS = [0.05, 0.02, 0.08, 0.05]
+
+
+def test_vmapped_sweep_matches_sequential_runs(pbm_log):
+    """Replica i of an R=4 vmapped sweep (distinct seeds AND lrs) must match
+    the sequential engine run with the same seed/lr to <=1e-5 on final
+    params and the full per-step loss history (vmap batching may legally
+    change BLAS reduction order, so not bit-exact)."""
+    cfg, train, _ = pbm_log
+    model = _model(cfg)
+    engine = TrainEngine(model, optim.adamw(0.99, inject_lr=True),
+                         chunk_batches=4, replicas=4)
+    params = engine.init_replica_params(SEEDS)
+    opt_state = engine.init_opt_state(params)
+    opt_state = engine.set_replica_lrs(opt_state, LRS)
+    loader = ClickLogLoader(train, batch_size=256, seed=5)
+    losses = []
+    for _ in range(2):
+        for chunk_arr, _, n in DevicePrefetcher(loader, chunk_batches=4):
+            params, opt_state, l = engine.step(params, opt_state, chunk_arr)
+            assert l.shape == (n, 4)
+            losses.append(np.asarray(l))
+    losses = np.concatenate(losses, axis=0)
+
+    for i, (seed, lr) in enumerate(zip(SEEDS, LRS)):
+        p_seq, _, l_seq = _sequential_engine_run(cfg, train, seed=seed, lr=lr,
+                                                 epochs=2)
+        _assert_trees_close(p_seq, select_replica(params, i),
+                            msg=f"replica {i} ")
+        np.testing.assert_allclose(losses[:, i], l_seq, atol=1e-5)
+
+
+def test_replica_histories_diverge_across_seeds():
+    """Distinct init seeds at one shared lr must produce diverging
+    per-replica loss histories (the seed-variance study this engine exists
+    for). Classic table models init to constants, so seed variance needs a
+    neural parameterization — an MLP attraction tower over features."""
+    from repro.core import MLPParameterConfig
+
+    cfg = SyntheticConfig(n_sessions=1000, n_queries=20, docs_per_query=10,
+                          positions=5, behavior="pbm", seed=3, n_features=8)
+    data, _ = generate_click_log(cfg)
+    train, _, _ = split_sessions(data, (0.8, 0.1, 0.1), seed=0)
+    model = PositionBasedModel(
+        positions=cfg.positions,
+        attraction=MLPParameterConfig(features=8, hidden=(16,)))
+    trainer = Trainer(optim.adamw(0.05), epochs=2, patience=100,
+                      log_fn=lambda *_: None, chunk_batches=4, replicas=4,
+                      replica_seeds=[0, 1, 2, 3])
+    history = trainer.train(model,
+                            ClickLogLoader(train, batch_size=128, seed=5))
+    first = history[0]["train_loss"]
+    assert isinstance(first, list) and len(first) == 4
+    assert len(set(first)) == 4, f"replica losses identical: {first}"
+
+
+# ---------------------------------------------------------------------------
+# Per-replica early stopping: freeze-in-place via the active mask.
+# ---------------------------------------------------------------------------
+
+def test_sweep_early_stopping_matches_sequential_trainers(pbm_log):
+    """Full Trainer parity under per-replica early stopping: a replica that
+    runs out of patience freezes in place, and its final params / val
+    metrics must match the sequential Trainer run with the same seed/lr —
+    including when one replica stops epochs before the other."""
+    cfg, train, val = pbm_log
+    seeds, lrs = [3, 4], [0.5, 0.01]  # big lr stops early, small keeps going
+    epochs, patience = 8, 1
+    mk_train = lambda: ClickLogLoader(train, batch_size=256, seed=5)
+    mk_val = lambda: ClickLogLoader(val, batch_size=128, shuffle=False,
+                                    drop_last=False)
+
+    seq_params, seq_vals, seq_epochs = [], [], []
+    for seed, lr in zip(seeds, lrs):
+        t = Trainer(optim.adamw(lr), epochs=epochs, patience=patience,
+                    seed=seed, log_fn=lambda *_: None, chunk_batches=4)
+        h = t.train(_model(cfg), mk_train(), mk_val())
+        seq_params.append(t._final_state.params)
+        seq_vals.append(h[-1]["val_ll"])
+        seq_epochs.append(len(h))
+
+    assert seq_epochs[0] != seq_epochs[1], (
+        f"both sequential runs stopped at epoch {seq_epochs[0]}; pick lrs "
+        "that early-stop at different epochs to exercise the freeze path")
+
+    sweep = Trainer(optim.adamw(0.99, inject_lr=True), epochs=epochs,
+                    patience=patience, log_fn=lambda *_: None,
+                    chunk_batches=4, replicas=2, replica_seeds=seeds,
+                    replica_lrs=lrs)
+    h = sweep.train(_model(cfg), mk_train(), mk_val())
+    assert len(h) == max(seq_epochs)  # runs until the last replica stops
+    final = sweep._final_state.params
+    for i in range(2):
+        _assert_trees_close(seq_params[i], select_replica(final, i),
+                            msg=f"replica {i} ")
+        # the frozen replica's val metric is pinned at its stopping epoch
+        np.testing.assert_allclose(h[seq_epochs[i] - 1]["val_ll"][i],
+                                   seq_vals[i], atol=1e-5)
+        np.testing.assert_allclose(h[-1]["val_ll"][i], seq_vals[i], atol=1e-5)
+    # the active mask in the history flips exactly when the early replica
+    # stops (records carry the mask the epoch trained under)
+    stop_first = min(seq_epochs)
+    i_first = seq_epochs.index(stop_first)
+    assert h[stop_first - 1]["active"][i_first] is True
+    assert h[stop_first]["active"][i_first] is False
+
+
+def test_sweep_resume_keeps_stopped_replicas_frozen(tmp_path, pbm_log):
+    """Early-stop state (active mask, best_val, bad_epochs) rides in the
+    checkpoint aux: a sweep resumed after a replica stopped must NOT
+    reactivate it — the resumed run matches the uninterrupted one
+    bit-for-bit."""
+    cfg, train, val = pbm_log
+    seeds, lrs = [3, 4], [0.5, 0.01]
+    epochs = 8
+    mk_train = lambda: ClickLogLoader(train, batch_size=256, seed=5)
+    mk_val = lambda: ClickLogLoader(val, batch_size=128, shuffle=False,
+                                    drop_last=False)
+
+    def make_trainer(n_epochs, ckpt_dir=None):
+        return Trainer(optim.adamw(0.99, inject_lr=True), epochs=n_epochs,
+                       patience=1, log_fn=lambda *_: None, chunk_batches=4,
+                       replicas=2, replica_seeds=seeds, replica_lrs=lrs,
+                       checkpoint_dir=ckpt_dir)
+
+    full = make_trainer(epochs)
+    h_full = full.train(_model(cfg), mk_train(), mk_val())
+    # first epoch that trained under a partial mask
+    stopped_epochs = [r["epoch"] for r in h_full if not all(r["active"])]
+    assert stopped_epochs, "no replica stopped — tune lrs"
+    e0 = stopped_epochs[0] - 1  # the epoch whose END stopped the replica
+
+    interrupted = make_trainer(e0, ckpt_dir=str(tmp_path / "sweep"))
+    interrupted.train(_model(cfg), mk_train(), mk_val())
+    resumed = make_trainer(epochs, ckpt_dir=str(tmp_path / "sweep"))
+    h_resumed = resumed.train(_model(cfg), mk_train(), mk_val(), resume=True)
+    # the stopped replica stays inactive from the first resumed epoch on
+    assert h_resumed[0]["active"] == h_full[e0]["active"]
+    assert len(h_resumed) == len(h_full) - e0
+    _assert_trees_equal(full._final_state.params,
+                        resumed._final_state.params)
+
+
+# ---------------------------------------------------------------------------
+# Stacked checkpoints + select_replica round-trip.
+# ---------------------------------------------------------------------------
+
+def test_select_replica_roundtrips_through_checkpoint(tmp_path, pbm_log):
+    cfg, train, val = pbm_log
+    trainer = Trainer(optim.adamw(0.05), epochs=2, patience=100,
+                      log_fn=lambda *_: None, chunk_batches=4, replicas=3,
+                      replica_seeds=[0, 1, 2],
+                      checkpoint_dir=str(tmp_path / "sweep"))
+    trainer.train(_model(cfg), ClickLogLoader(train, batch_size=256, seed=5))
+    final = trainer._final_state
+
+    like = {"params": final.params, "opt_state": final.opt_state}
+    restored, aux, _ = trainer.ckpt.restore(like=like)
+    _assert_trees_equal(like, restored)
+    # every replica extracts to a standalone, evaluable tree
+    single = Trainer(optim.adamw(0.05), log_fn=lambda *_: None)
+    vloader = lambda: ClickLogLoader(val, batch_size=128, shuffle=False,
+                                     drop_last=False)
+    model = _model(cfg)
+    sweep_metrics = trainer.evaluate(model, final.params, vloader(),
+                                     replicas=3)
+    for i in range(3):
+        p_i = select_replica(restored["params"], i)
+        for single_leaf, stacked_leaf in zip(
+                jax.tree_util.tree_leaves(p_i),
+                jax.tree_util.tree_leaves(restored["params"])):
+            # replica axis gone: rank drops by exactly one
+            assert single_leaf.ndim == stacked_leaf.ndim - 1
+            assert single_leaf.shape == stacked_leaf.shape[1:]
+        out = single.evaluate(model, p_i, vloader())
+        np.testing.assert_allclose(out["ll"], sweep_metrics["ll"][i],
+                                   atol=1e-5)
+        # the sweep trainer's own test() treats explicit params as a
+        # standalone run (the select_replica workflow)
+        solo = trainer.test(model, vloader(), params=p_i)
+        np.testing.assert_allclose(solo["ll"], sweep_metrics["ll"][i],
+                                   atol=1e-5)
+    # ...and with no explicit params it reports all replicas
+    full = trainer.test(model, vloader())
+    assert len(full["ll"]) == 3
+    # stack_replicas inverts select_replica
+    restacked = stack_replicas([select_replica(restored["params"], i)
+                                for i in range(3)])
+    _assert_trees_equal(final.params, restacked)
+
+
+# ---------------------------------------------------------------------------
+# Injected-lr plumbing.
+# ---------------------------------------------------------------------------
+
+def test_set_replica_lrs_requires_injected_optimizer(pbm_log):
+    cfg, _, _ = pbm_log
+    model = _model(cfg)
+    engine = TrainEngine(model, optim.adamw(0.05), replicas=2)
+    params = engine.init_replica_params([0, 1])
+    opt_state = engine.init_opt_state(params)
+    with pytest.raises(ValueError, match="inject_lr"):
+        engine.set_replica_lrs(opt_state, [0.05, 0.01])
+
+
+def test_injected_lr_matches_static_lr_bit_exact(pbm_log):
+    """inject_lr only moves the lr into state — the update math must be
+    bit-identical to the static-lr optimizer."""
+    cfg, train, _ = pbm_log
+    model = _model(cfg)
+    batch = next(iter(ClickLogLoader(train, batch_size=256, seed=5)))
+    batch = {k: jnp.asarray(v) for k, v in batch.items()}
+    params = model.init(jax.random.PRNGKey(0))
+    outs = []
+    for tx in (optim.adamw(0.03), optim.adamw(0.03, inject_lr=True)):
+        p, o = _copy(params), tx.init(_copy(params))
+        for _ in range(3):
+            loss, grads = jax.value_and_grad(model.compute_loss)(p, batch)
+            updates, o = tx.update(grads, o, p)
+            p = optim.apply_updates(p, updates)
+        outs.append(p)
+    _assert_trees_equal(outs[0], outs[1])
+
+
+def test_set_injected_lr_on_plain_state_raises():
+    tx = optim.adamw(0.05)
+    state = tx.init({"w": jnp.ones(3)})
+    with pytest.raises(ValueError, match="InjectLRState"):
+        optim.set_injected_lr(state, 0.01)
+    tx2 = optim.adamw(0.05, inject_lr=True)
+    state2 = optim.set_injected_lr(tx2.init({"w": jnp.ones(3)}), 0.01)
+    np.testing.assert_allclose(float(optim.get_injected_lr(state2)), 0.01)
+
+
+def test_replica_lrs_refused_with_sparse_tables(pbm_log):
+    cfg, _, _ = pbm_log
+    model = _model(cfg)
+    engine = TrainEngine(model, optim.adamw(0.05, weight_decay=0.0,
+                                            inject_lr=True),
+                         replicas=2, sparse_tables=True,
+                         sparse_table_kwargs=dict(lr=0.05, weight_decay=0.0))
+    params = engine.init_replica_params([0, 1])
+    opt_state = engine.init_opt_state(params)
+    with pytest.raises(NotImplementedError, match="sparse"):
+        engine.set_replica_lrs(opt_state, [0.05, 0.01])
+
+
+def test_sparse_tables_vmapped_sweep_matches_sequential(pbm_log):
+    """Sparse lazy-AdamW segment scatters vmap over the replica axis: an
+    R=2 seed sweep with sparse tables matches two sequential sparse runs."""
+    cfg, train, _ = pbm_log
+    kwargs = dict(sparse_tables=True,
+                  sparse_table_kwargs=dict(lr=0.05, weight_decay=0.0))
+    model = _model(cfg)
+    engine = TrainEngine(model, optim.adamw(0.05, weight_decay=0.0),
+                         chunk_batches=4, replicas=2, **kwargs)
+    params = engine.init_replica_params([0, 9])
+    opt_state = engine.init_opt_state(params)
+    loader = ClickLogLoader(train, batch_size=256, seed=5)
+    for chunk_arr, _, _ in DevicePrefetcher(loader, chunk_batches=4):
+        params, opt_state, _ = engine.step(params, opt_state, chunk_arr)
+
+    for i, seed in enumerate([0, 9]):
+        m = _model(cfg)
+        eng = TrainEngine(m, optim.adamw(0.05, weight_decay=0.0),
+                          chunk_batches=4, **kwargs)
+        p = m.init(jax.random.PRNGKey(seed))
+        o = eng.init_opt_state(p)
+        loader = ClickLogLoader(train, batch_size=256, seed=5)
+        for chunk_arr, _, _ in DevicePrefetcher(loader, chunk_batches=4):
+            p, o, _ = eng.step(p, o, chunk_arr)
+        _assert_trees_close(p, select_replica(params, i), msg=f"replica {i} ")
+
+
+# ---------------------------------------------------------------------------
+# Chunked scanned evaluation.
+# ---------------------------------------------------------------------------
+
+def test_chunked_eval_matches_per_batch_eval(pbm_log):
+    """evaluate() through DevicePrefetcher(chunk_batches=N) + scanned step
+    must equal the per-batch path exactly (same accumulation order),
+    including the odd-shaped drop_last=False tail flushing into its own
+    chunk."""
+    cfg, train, val = pbm_log
+    model = _model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    mk = lambda: ClickLogLoader(val, batch_size=48, shuffle=False,
+                                drop_last=False)
+    assert mk().batches_per_epoch % 4 != 0  # exercise the partial tail
+    per_batch = Trainer(optim.adamw(0.05), log_fn=lambda *_: None,
+                        chunk_batches=1)
+    chunked = Trainer(optim.adamw(0.05), log_fn=lambda *_: None,
+                      chunk_batches=4)
+    out_b = per_batch.evaluate(model, params, mk(), per_rank=True)
+    out_c = chunked.evaluate(model, params, mk(), per_rank=True)
+    assert set(out_b) == set(out_c)
+    for k in ("ll", "ppl", "cond_ppl"):
+        np.testing.assert_allclose(out_b[k], out_c[k], rtol=1e-6)
+        np.testing.assert_allclose(out_b["per_rank"][k], out_c["per_rank"][k],
+                                   rtol=1e-6)
+
+
+def test_chunked_eval_dispatches_once_per_chunk(pbm_log, monkeypatch):
+    """The scanned eval step must be called once per chunk, not per batch."""
+    cfg, train, val = pbm_log
+    model = _model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    trainer = Trainer(optim.adamw(0.05), log_fn=lambda *_: None,
+                      chunk_batches=4)
+    loader = ClickLogLoader(val, batch_size=64, shuffle=False,
+                            drop_last=False)
+    nb = loader.batches_per_epoch
+    metrics, step, chunk_step = trainer._get_eval_step(model, None)
+    calls = []
+
+    def counting(params, state, chunk):
+        calls.append(int(chunk["positions"].shape[0]))
+        return chunk_step(params, state, chunk)
+
+    trainer._eval_cache[(model, None)] = (metrics, step, counting)
+    trainer.evaluate(model, params, loader)
+    assert sum(calls) == nb
+    # full-shape batches chunk together; the odd-shaped drop_last=False
+    # tail flushes into its own chunk of 1
+    full = loader.n // loader.batch_size
+    assert len(calls) == -(-full // 4) + (1 if loader.n % loader.batch_size
+                                          else 0)
+
+
+# ---------------------------------------------------------------------------
+# LRU eval cache.
+# ---------------------------------------------------------------------------
+
+def test_eval_cache_is_lru_not_fifo(pbm_log):
+    """In a >4-model sweep, the model evaluated every epoch must stay
+    cached: insertion-order eviction used to evict the hot model as soon
+    as 4 cold ones passed through."""
+    cfg, train, val = pbm_log
+    trainer = Trainer(optim.adamw(0.05), log_fn=lambda *_: None)
+    makes = []
+    original = trainer._make_eval_step
+
+    def counting(model_, metrics_, replicas=None):
+        makes.append(model_)
+        return original(model_, metrics_, replicas)
+
+    trainer._make_eval_step = counting
+    hot = _model(cfg)
+    cold = [_model(cfg) for _ in range(4)]
+    params = hot.init(jax.random.PRNGKey(0))
+    loader = lambda: ClickLogLoader(val, batch_size=128, shuffle=False,
+                                    drop_last=False)
+    trainer.evaluate(hot, params, loader())
+    for m in cold:
+        # hot is re-touched before each cold model, as a real sweep's
+        # every-epoch validation would
+        trainer.evaluate(hot, params, loader())
+        trainer.evaluate(m, m.init(jax.random.PRNGKey(1)), loader())
+    assert makes.count(hot) == 1, (
+        f"hot model retraced {makes.count(hot)} times — cache evicted it")
+    assert len(makes) == 5  # hot once + each cold model once
+
+
+def test_trainer_replica_knob_validation():
+    with pytest.raises(ValueError, match="replica"):
+        Trainer(optim.adamw(0.05), replica_lrs=[0.1, 0.2])
+    with pytest.raises(ValueError, match="replica_seeds"):
+        Trainer(optim.adamw(0.05), replicas=3, replica_seeds=[1, 2])
+
+
+# ---------------------------------------------------------------------------
+# Replica sweep composed with the data-parallel mesh (8 fake host devices,
+# subprocess — the main test process stays single-device, see
+# tests/test_distrib.py).
+# ---------------------------------------------------------------------------
+
+SWEEP_DP_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax
+from repro import optim
+from repro.core import PositionBasedModel
+from repro.data import ClickLogLoader, SyntheticConfig, generate_click_log, split_sessions
+from repro.train import Trainer
+from repro.launch.mesh import make_data_parallel_mesh
+
+cfg = SyntheticConfig(n_sessions=2200, n_queries=25, docs_per_query=12,
+                      positions=6, behavior="pbm", seed=13)
+data, _ = generate_click_log(cfg)
+train, val, _ = split_sessions(data, (0.8, 0.1, 0.1), seed=0)
+lrs = [0.05, 0.02, 0.08, 0.05]
+
+def run(mesh):
+    model = PositionBasedModel(query_doc_pairs=cfg.n_query_doc_pairs,
+                               positions=cfg.positions, init_prob=0.2)
+    trainer = Trainer(optim.adamw(0.99, inject_lr=True), epochs=2,
+                      patience=100, log_fn=lambda *_: None, chunk_batches=4,
+                      mesh=mesh, replicas=4, replica_lrs=lrs,
+                      replica_seeds=[0, 1, 2, 3])
+    loader = ClickLogLoader(train, batch_size=256, seed=5)
+    vloader = ClickLogLoader(val, batch_size=128, shuffle=False,
+                             drop_last=False)
+    history = trainer.train(model, loader, vloader)
+    return history, trainer._final_state.params
+
+mesh = make_data_parallel_mesh()
+h_dp, p_dp = run(mesh)
+h_1, p_1 = run(None)
+# replica axis replicated, batch axis sharded: every replica's params match
+# the single-device sweep to float tolerance
+for (ka, a), (_, b) in zip(jax.tree_util.tree_leaves_with_path(p_1),
+                           jax.tree_util.tree_leaves_with_path(p_dp)):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5,
+                               err_msg=str(ka))
+for r1, r8 in zip(h_1, h_dp):
+    np.testing.assert_allclose(r1["train_loss"], r8["train_loss"], atol=1e-5)
+    np.testing.assert_allclose(r1["val_ll"], r8["val_ll"], atol=1e-5)
+sharded = [x.sharding for x in jax.tree_util.tree_leaves(p_dp)]
+assert all(len(s.device_set) == 8 for s in sharded), sharded
+print("SWEEP_DP_OK")
+"""
+
+
+def test_vmapped_sweep_on_data_parallel_mesh():
+    import os
+    import subprocess
+    import sys
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    env["JAX_PLATFORMS"] = "cpu"  # see test_distrib.py: avoid TPU probing
+    proc = subprocess.run([sys.executable, "-c", SWEEP_DP_SCRIPT],
+                          capture_output=True, text=True, env=env, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "SWEEP_DP_OK" in proc.stdout
