@@ -1,7 +1,8 @@
 """Data pipeline: synthetic click-log simulation, out-of-core session store,
 and sharded, resumable in-memory + streaming loading."""
 from repro.data.loader import ClickLogLoader, DevicePrefetcher, split_sessions
-from repro.data.store import (SessionStore, SessionStoreWriter, ingest_synthetic,
+from repro.data.store import (SessionStore, SessionStoreWriter,
+                              ShardCorruptionError, ingest_synthetic,
                               write_session_store)
 from repro.data.streaming import StreamingClickLogLoader, StreamingLoaderState
 from repro.data.synthetic import (SyntheticConfig, generate_click_log,
@@ -17,6 +18,7 @@ __all__ = [
     "split_sessions",
     "SessionStore",
     "SessionStoreWriter",
+    "ShardCorruptionError",
     "write_session_store",
     "ingest_synthetic",
     "StreamingClickLogLoader",

@@ -47,6 +47,13 @@ MANIFEST_NAME = "manifest.json"
 FORMAT_VERSION = 1
 
 
+class ShardCorruptionError(ValueError):
+    """A shard's bytes disagree with the manifest (bad crc32, or a column
+    file whose size doesn't match the recorded row count). Distinct from
+    transient ``OSError`` IO failures: corruption is deterministic, so
+    callers retry the latter but quarantine (or raise) on the former."""
+
+
 def _shard_dirname(index: int) -> str:
     return f"shard_{index:05d}"
 
@@ -291,7 +298,7 @@ class SessionStore:
             want = rows * spec.row_nbytes
             got = os.path.getsize(path)
             if got != want:
-                raise ValueError(
+                raise ShardCorruptionError(
                     f"{path} is {got} bytes, manifest implies {want} "
                     f"({rows} rows × {spec.row_nbytes} B) — truncated or "
                     "mismatched shard file")
@@ -299,16 +306,18 @@ class SessionStore:
                                   shape=(rows,) + spec.shape)
         return out
 
-    def verify(self, index: Optional[int] = None) -> None:
-        """Check crc32 of every column file (or one shard's). Raises on drift."""
+    def verify(self, index: Optional[int] = None,
+               columns: Optional[Iterable[str]] = None) -> None:
+        """Check crc32 of every column file (or one shard's, or a subset of
+        columns). Raises :class:`ShardCorruptionError` on drift."""
         indices = range(self.n_shards) if index is None else [index]
         for i in indices:
-            cols = self.open_shard(i)
+            cols = self.open_shard(i, columns=columns)
             for name, arr in cols.items():
                 want = self.shards[i]["checksums"][name]
                 got = _crc32(np.asarray(arr))
                 if got != want:
-                    raise ValueError(
+                    raise ShardCorruptionError(
                         f"checksum mismatch in {self._shard_path(i, name)}: "
                         f"manifest={want} file={got}")
 

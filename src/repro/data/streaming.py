@@ -34,18 +34,47 @@ resume skips already-consumed shards without reading them.
 A background read-ahead thread stages upcoming permuted windows into a
 bounded queue so disk reads overlap compute; the consuming iterator (and
 ``DevicePrefetcher`` above it) sees plain numpy batches either way.
+
+**Self-healing** (all opt-in, off by default so the fast path is
+byte-identical to the unhardened loader):
+
+* ``verify_checksums=True`` re-checks the manifest's crc32 for every column
+  the loader reads, at shard-open time — the store has always *written*
+  checksums; this is the read path that finally consumes them.
+* ``io_retries=K`` retries a failed shard open/verify up to K times with
+  exponential backoff (``io_retry_backoff * 2**attempt``) — transient
+  ``OSError`` only; corruption is deterministic and never retried.
+* ``corrupt_policy`` decides what a :class:`ShardCorruptionError` does:
+  ``"raise"`` (default) surfaces it; ``"skip"`` **quarantines** the shard —
+  it contributes zero rows from the moment of detection, the quarantine set
+  rides in ``state_dict`` so resume excludes it from the cursor arithmetic,
+  and every later epoch skips it up front. Corruption is detected at shard
+  open, *before* any of its rows are delivered, so the delivered stream is
+  exactly the fault-free stream minus the quarantined shard's rows —
+  deterministic and replayable. Quarantine is per-host state; with
+  ``host_count > 1`` the policy must stay ``"raise"`` (hosts dropping
+  different shards would desync the step count).
+* The consumer side watches the read-ahead producer: a producer that dies
+  with a transient error is restarted once (``watchdog_restarts``) from the
+  first window it had not yet delivered — already-queued windows are never
+  re-read, so the batch stream is unchanged — before the error is surfaced
+  with its original traceback.
 """
 from __future__ import annotations
 
 import dataclasses
+import os
 import queue
 import threading
+import time
 from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.data.loader import MODEL_KEYS
-from repro.data.store import SessionStore, _take_rows
+from repro.data.store import SessionStore, ShardCorruptionError, _take_rows
+
+CORRUPT_POLICIES = ("raise", "skip")
 
 
 @dataclasses.dataclass
@@ -81,14 +110,22 @@ class StreamingClickLogLoader:
     Same surface as ``ClickLogLoader`` (``__iter__`` runs one epoch,
     ``epochs(n)``, ``batches_per_epoch``, ``state_dict``/``load_state_dict``)
     but backed by a :class:`SessionStore` instead of an in-memory dict.
+    See the module docstring for the self-healing knobs
+    (``verify_checksums``, ``io_retries``, ``corrupt_policy``,
+    ``watchdog_restarts``).
     """
 
     def __init__(self, store, batch_size: int, shuffle: bool = True,
                  seed: int = 0, drop_last: bool = True,
                  host_id: int = 0, host_count: int = 1,
                  include_keys: Optional[Tuple[str, ...]] = None,
-                 window_rows: Optional[int] = None, read_ahead: int = 2):
-        self.store = store if isinstance(store, SessionStore) else SessionStore(store)
+                 window_rows: Optional[int] = None, read_ahead: int = 2,
+                 verify_checksums: bool = False,
+                 corrupt_policy: str = "raise",
+                 io_retries: int = 0, io_retry_backoff: float = 0.05,
+                 watchdog_restarts: int = 1, log_fn=print):
+        self.store = (SessionStore(store)
+                      if isinstance(store, (str, os.PathLike)) else store)
         if host_count > 1 and self.store.n_shards < host_count:
             raise ValueError(
                 f"store has {self.store.n_shards} shards but host_count="
@@ -99,6 +136,14 @@ class StreamingClickLogLoader:
                 "drop_last=False with host_count > 1 would give hosts "
                 "different final-batch shapes; multi-host training requires "
                 "drop_last=True")
+        if corrupt_policy not in CORRUPT_POLICIES:
+            raise ValueError(f"corrupt_policy must be one of "
+                             f"{CORRUPT_POLICIES}, got {corrupt_policy!r}")
+        if corrupt_policy == "skip" and host_count > 1:
+            raise ValueError(
+                'corrupt_policy="skip" is per-host state: hosts quarantining '
+                "different shards would run different step counts and desync "
+                'collectives — use "raise" with host_count > 1')
         self.keys = tuple(include_keys or
                           (k for k in self.store.columns if k in MODEL_KEYS))
         missing = [k for k in self.keys if k not in self.store.columns]
@@ -123,18 +168,32 @@ class StreamingClickLogLoader:
             raise ValueError(f"window_rows must be >= 1, got {window_rows}")
         self.window_rows = window_rows
         self.read_ahead = int(read_ahead)
+        self.verify_checksums = bool(verify_checksums)
+        self.corrupt_policy = corrupt_policy
+        self.io_retries = int(io_retries)
+        self.io_retry_backoff = float(io_retry_backoff)
+        self.watchdog_restarts = int(watchdog_restarts)
+        self.log_fn = log_fn
+        self.quarantined: set = set()
         # One shard spanning the whole loader degenerates to the in-memory
         # loader's order: in-shard seed (seed, epoch) == ClickLogLoader.
         self._single_shard = (self.store.n_shards == 1 and host_count == 1)
         self.state = StreamingLoaderState()
 
     # -- epoch geometry (pure arithmetic, no IO) -------------------------------
+    def _quarantined_rows(self) -> int:
+        return sum(self.store.shard_rows(s) for s in self.quarantined
+                   if s in self.shard_ids)
+
     @property
     def batches_per_epoch(self) -> int:
-        """Identical on every host (computed from the smallest host's rows)."""
+        """Identical on every host (computed from the smallest host's rows).
+        Quarantined shards' rows are excluded (single-host only — skip
+        policy is refused with ``host_count > 1``)."""
+        rows = self._epoch_rows - self._quarantined_rows()
         if self.drop_last:
-            return self._epoch_rows // self.batch_size
-        return -(-self._epoch_rows // self.batch_size)
+            return rows // self.batch_size
+        return -(-rows // self.batch_size)
 
     def _shard_order(self, epoch: int) -> List[int]:
         if not self.shuffle or len(self.shard_ids) <= 1:
@@ -152,9 +211,14 @@ class StreamingClickLogLoader:
         return np.random.default_rng(key).permutation(rows)
 
     def _epoch_plan(self, epoch: int) -> List[Tuple[int, int, int, int]]:
-        """(shard_pos, shard_id, start, stop) windows in stream order."""
+        """(shard_pos, shard_id, start, stop) windows in stream order.
+        Already-quarantined shards are excluded up front; a shard that fails
+        verification mid-epoch is quarantined at open time and its windows
+        deliver zero rows (see ``_read_plan``)."""
         plan = []
         for pos, sid in enumerate(self._shard_order(epoch)):
+            if sid in self.quarantined:
+                continue
             rows = self.store.shard_rows(sid)
             w = self.window_rows or rows
             for start in range(0, rows, w):
@@ -162,29 +226,75 @@ class StreamingClickLogLoader:
         return plan
 
     # -- reading ---------------------------------------------------------------
-    def _read_plan(self, epoch: int,
-                   entries: Sequence[Tuple[Tuple[int, int, int, int], int]]
-                   ) -> Iterator[Tuple[int, Dict[str, np.ndarray]]]:
-        """Materialize plan windows in order; ``entries`` pairs each plan
-        entry with how many leading rows to drop (resume skip)."""
-        cached_sid, cols, perm = None, None, None
-        for (pos, sid, start, stop), drop in entries:
-            if sid != cached_sid:
+    def _quarantine(self, sid: int, err: BaseException) -> None:
+        self.quarantined.add(sid)
+        self.log_fn(f"[streaming] QUARANTINED shard {sid}: {err} — its rows "
+                    f"are dropped from this and every later epoch "
+                    f"({self._quarantined_rows()} rows quarantined total)")
+
+    def _read_shard(self, sid: int) -> Dict[str, np.ndarray]:
+        """Open (and optionally crc-verify) one shard with transient-IO
+        retries. :class:`ShardCorruptionError` is deterministic and
+        propagates immediately; ``OSError`` backs off exponentially."""
+        attempt = 0
+        while True:
+            try:
                 cols = self.store.open_shard(sid, columns=self.keys)
-                perm = self._inshard_order(epoch, sid)
+                if self.verify_checksums:
+                    self.store.verify(sid, columns=self.keys)
+                return cols
+            except ShardCorruptionError:
+                raise
+            except OSError as e:
+                if attempt >= self.io_retries:
+                    raise
+                delay = self.io_retry_backoff * (2 ** attempt)
+                attempt += 1
+                self.log_fn(f"[streaming] transient IO error on shard {sid} "
+                            f"(attempt {attempt}/{self.io_retries + 1}): "
+                            f"{e!r}; retrying in {delay:.2f}s")
+                time.sleep(delay)
+
+    def _read_plan(self, epoch: int,
+                   entries: Sequence[Tuple[Tuple[int, int, int, int], int]],
+                   start: int = 0
+                   ) -> Iterator[Tuple[int, int, Dict[str, np.ndarray]]]:
+        """Materialize plan windows in order; ``entries`` pairs each plan
+        entry with how many leading rows to drop (resume skip). Yields
+        ``(entry_index, shard_pos, block)`` so a restarted producer can
+        resume from the first undelivered entry."""
+        cached_sid, cols, perm = None, None, None
+        for i in range(start, len(entries)):
+            (pos, sid, win_start, win_stop), drop = entries[i]
+            if sid != cached_sid:
                 cached_sid = sid
-            rows = perm[start + drop:stop]
+                try:
+                    cols = self._read_shard(sid)
+                    perm = self._inshard_order(epoch, sid)
+                except ShardCorruptionError as e:
+                    if self.corrupt_policy != "skip":
+                        raise
+                    self._quarantine(sid, e)
+                    cols = None
+            if cols is None:  # quarantined mid-epoch: zero rows delivered
+                continue
+            rows = perm[win_start + drop:win_stop]
             if rows.size == 0:
                 continue
-            yield pos, {k: np.asarray(v[rows]) for k, v in cols.items()}
+            yield i, pos, {k: np.asarray(v[rows]) for k, v in cols.items()}
 
     def _block_stream(self, epoch, entries):
-        """``_read_plan`` behind a bounded background read-ahead thread."""
+        """``_read_plan`` behind a bounded background read-ahead thread,
+        with a consumer-side watchdog: a producer that dies is restarted
+        (``watchdog_restarts`` times) from its first undelivered entry;
+        after that the original exception propagates, traceback intact."""
         if self.read_ahead <= 0:
-            yield from self._read_plan(epoch, entries)
+            for _, pos, block in self._read_plan(epoch, entries):
+                yield pos, block
             return
         q: queue.Queue = queue.Queue(maxsize=self.read_ahead)
         stop = threading.Event()
+        progress = {"next": 0}  # first entry index not yet queued
 
         def put(item) -> bool:
             while not stop.is_set():
@@ -195,28 +305,53 @@ class StreamingClickLogLoader:
                     continue
             return False
 
-        def worker():
+        def worker(start):
             try:
-                for item in self._read_plan(epoch, entries):
-                    if not put(item):
+                for i, pos, block in self._read_plan(epoch, entries,
+                                                     start=start):
+                    if not put((pos, block)):
                         return
+                    # After a successful put the only exception sources are
+                    # in the next _read_plan iteration, so a restart from
+                    # `next` never re-reads (or drops) a delivered window.
+                    progress["next"] = i + 1
                 put(_DONE)
             except BaseException as e:  # surfaced on the consumer side
                 put(_WorkerError(e))
 
-        thread = threading.Thread(target=worker, daemon=True,
-                                  name="store-read-ahead")
-        thread.start()
+        def start_worker():
+            t = threading.Thread(target=worker, args=(progress["next"],),
+                                 daemon=True, name="store-read-ahead")
+            t.start()
+            return t
+
+        thread = start_worker()
+        restarts_left = self.watchdog_restarts
         try:
             while True:
                 item = q.get()
                 if item is _DONE:
                     return
                 if isinstance(item, _WorkerError):
-                    raise item.error
+                    err = item.error
+                    if restarts_left > 0 and not isinstance(
+                            err, ShardCorruptionError):
+                        restarts_left -= 1
+                        self.log_fn(
+                            f"[streaming] read-ahead producer died ({err!r});"
+                            f" restarting from plan entry "
+                            f"{progress['next']} "
+                            f"({restarts_left} restarts left)")
+                        thread.join(timeout=5.0)
+                        thread = start_worker()
+                        continue
+                    raise err
                 yield item
         finally:
             stop.set()
+            # Abandoning the iterator mid-epoch must not leak the producer:
+            # stop makes its pending put() bail, so the join is prompt.
+            thread.join(timeout=10.0)
 
     # -- iteration -------------------------------------------------------------
     def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
@@ -228,9 +363,13 @@ class StreamingClickLogLoader:
             # Resume arithmetic: skip whole windows that precede the cursor
             # row, and drop windows past the epoch's step cap (a host with
             # surplus rows — shard-granular placement — must neither read
-            # nor buffer them). Pure arithmetic, no IO.
+            # nor buffer them). Pure arithmetic, no IO. Quarantined shards
+            # are already absent from the plan, so the cursor row indexes
+            # the *delivered* stream — a resume after a skip-policy
+            # quarantine (persisted in state_dict) lands on the same batch.
             skip = self.state.step * self.batch_size
-            need = nb * self.batch_size if self.drop_last else self.n
+            need = (nb * self.batch_size if self.drop_last
+                    else self.n - self._quarantined_rows())
             entries, cum = [], 0
             for entry in self._epoch_plan(epoch):
                 rows = entry[3] - entry[2]
@@ -272,7 +411,14 @@ class StreamingClickLogLoader:
 
     # -- checkpointing ---------------------------------------------------------
     def state_dict(self):
-        return self.state.to_dict()
+        d = self.state.to_dict()
+        if self.quarantined:
+            # The quarantine set is part of the stream definition: a resume
+            # that forgot it would re-count the corrupt shard's rows in the
+            # cursor arithmetic and land on the wrong batch.
+            d["quarantined"] = sorted(self.quarantined)
+        return d
 
     def load_state_dict(self, d):
         self.state = StreamingLoaderState.from_dict(d)
+        self.quarantined = set(int(s) for s in d.get("quarantined", ()))

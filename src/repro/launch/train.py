@@ -26,6 +26,13 @@ embedding tables to lazy-AdamW scatter updates. Sweep knobs (README
 "Sweeps"): ``--replicas R`` trains R seed/lr variants in one vmapped run,
 with ``--replica-seeds`` / ``--replica-lrs`` setting the per-replica knobs.
 
+Fault tolerance (see README "Fault tolerance"): ``--max-restarts N``
+supervises training in a child process and relaunches it after crashes
+(resuming from ``--ckpt-dir``), ``--verify-store`` crc-checks shards at
+read time with ``--corrupt-shards raise|skip`` deciding policy,
+``--nonfinite-guard`` skips non-finite optimizer steps on-device, and
+``--fault-kill-at-step`` arms a chaos-test kill switch.
+
 Single-host here; at pod scale the same entry point runs per host with
 --host-id/--host-count carving the data shard (rows of the in-memory dict,
 or whole store shards for the streaming path) and jax.distributed
@@ -36,6 +43,8 @@ from __future__ import annotations
 
 import argparse
 import os
+import signal
+import sys
 
 from repro import optim
 from repro.core import (Compression, EmbeddingParameterConfig, MODEL_REGISTRY)
@@ -76,7 +85,10 @@ def make_loaders(args):
         train = StreamingClickLogLoader(train_store, batch_size=args.batch,
                                         seed=args.seed, host_id=args.host_id,
                                         host_count=args.host_count,
-                                        window_rows=args.window_rows)
+                                        window_rows=args.window_rows,
+                                        verify_checksums=args.verify_store,
+                                        corrupt_policy=args.corrupt_shards,
+                                        io_retries=args.io_retries)
         val = StreamingClickLogLoader(os.path.join(args.store_dir, "val"),
                                       batch_size=8192, shuffle=False,
                                       drop_last=False)
@@ -141,7 +153,60 @@ def main():
                          "all); switches the optimizer to inject_lr=True")
     ap.add_argument("--replica-seeds", type=int, nargs="+", default=None,
                     help="one init seed per replica (default: --seed + i)")
+    ap.add_argument("--max-restarts", type=int, default=0,
+                    help="supervise training in a child process and relaunch "
+                         "it after crashes up to N times; resumes from "
+                         "--ckpt-dir (required)")
+    ap.add_argument("--verify-store", action="store_true",
+                    help="crc32-verify every store shard's columns at read "
+                         "time (streaming path)")
+    ap.add_argument("--corrupt-shards", default="raise",
+                    choices=["raise", "skip"],
+                    help="what a corrupt train shard does under "
+                         "--verify-store: fail the run, or quarantine the "
+                         "shard and keep training deterministically")
+    ap.add_argument("--io-retries", type=int, default=2,
+                    help="transient shard-read failures retried with "
+                         "exponential backoff (streaming path)")
+    ap.add_argument("--nonfinite-guard", action="store_true",
+                    help="detect non-finite loss/grads on-device and skip "
+                         "those optimizer steps (counted in history as "
+                         "skipped_steps)")
+    ap.add_argument("--step-budget-seconds", type=float, default=None,
+                    help="flag steps slower than this wall-clock budget "
+                         "(watchdog_violations in history)")
+    ap.add_argument("--fault-kill-at-step", type=int, default=None,
+                    help="CHAOS TESTING: kill this process when train batch "
+                         "N is produced — armed only while --ckpt-dir has "
+                         "no committed checkpoint, so a restarted run "
+                         "completes")
+    ap.add_argument("--fault-kill-signal", default="KILL",
+                    choices=["TERM", "KILL"],
+                    help="signal --fault-kill-at-step sends (TERM exercises "
+                         "graceful preemption, KILL an instant crash)")
     args = ap.parse_args()
+    if args.max_restarts:
+        if not args.ckpt_dir:
+            ap.error("--max-restarts requires --ckpt-dir (the restarted "
+                     "child resumes from it)")
+        from repro.train import run_with_restarts
+
+        # Re-run this exact invocation as a supervised child, minus the
+        # --max-restarts flag itself (the child must not recurse).
+        child_args, skip = [], False
+        for a in sys.argv[1:]:
+            if skip:
+                skip = False
+                continue
+            if a == "--max-restarts":
+                skip = True
+                continue
+            if a.startswith("--max-restarts="):
+                continue
+            child_args.append(a)
+        raise SystemExit(run_with_restarts(
+            [sys.executable, "-m", "repro.launch.train"] + child_args,
+            args.max_restarts))
     if args.ingest and not args.store_dir:
         ap.error("--ingest requires --store-dir")
     if args.sparse_tables and args.compression == "quotient_remainder":
@@ -168,6 +233,21 @@ def main():
 
     train_loader, val_loader, test_loader, data_cfg = make_loaders(args)
 
+    if args.fault_kill_at_step is not None:
+        from repro.testing import KillSwitch
+
+        has_ckpt = bool(args.ckpt_dir) and os.path.isdir(args.ckpt_dir) and any(
+            n.startswith("step_") and
+            os.path.exists(os.path.join(args.ckpt_dir, n, "COMMIT"))
+            for n in os.listdir(args.ckpt_dir))
+        if not has_ckpt:
+            sig = (signal.SIGKILL if args.fault_kill_signal == "KILL"
+                   else signal.SIGTERM)
+            train_loader = KillSwitch(train_loader, args.fault_kill_at_step,
+                                      sig=sig)
+            print(f"[train] chaos: SIG{args.fault_kill_signal} armed at "
+                  f"train batch {args.fault_kill_at_step}")
+
     attraction = EmbeddingParameterConfig(
         parameters=data_cfg.n_query_doc_pairs,
         compression=Compression(args.compression),
@@ -193,6 +273,8 @@ def main():
                       replicas=args.replicas,
                       replica_lrs=args.replica_lrs,
                       replica_seeds=args.replica_seeds,
+                      nonfinite_guard=args.nonfinite_guard,
+                      step_budget_seconds=args.step_budget_seconds,
                       seed=args.seed)
     trainer.train(model, train_loader, val_loader, resume=bool(args.ckpt_dir))
     results = trainer.test(model, test_loader)

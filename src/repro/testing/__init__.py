@@ -1,0 +1,13 @@
+"""Chaos-testing utilities: deterministic fault injection for the data
+plane, the train step, and the process itself."""
+from repro.testing.faults import (FlakyShardReads, KillSwitch,
+                                  NonFiniteBatchInjector, corrupt_shard_file,
+                                  truncate_tail)
+
+__all__ = [
+    "corrupt_shard_file",
+    "truncate_tail",
+    "NonFiniteBatchInjector",
+    "FlakyShardReads",
+    "KillSwitch",
+]

@@ -2,9 +2,12 @@
 tolerance."""
 from repro.train.trainer import Trainer, TrainState
 from repro.train.engine import TrainEngine, discover_sparse_tables
-from repro.train.checkpoints import (CheckpointManager, select_replica,
+from repro.train.checkpoints import (CheckpointCorruptionError,
+                                     CheckpointManager, select_replica,
                                      stack_replicas)
-from repro.train.fault_tolerance import PreemptionHandler, drop_slowest_aggregate
+from repro.train.fault_tolerance import (PreemptionHandler, StepWatchdog,
+                                         drop_slowest_aggregate,
+                                         run_with_restarts)
 
 __all__ = [
     "Trainer",
@@ -12,8 +15,11 @@ __all__ = [
     "TrainEngine",
     "discover_sparse_tables",
     "CheckpointManager",
+    "CheckpointCorruptionError",
     "select_replica",
     "stack_replicas",
     "PreemptionHandler",
+    "StepWatchdog",
     "drop_slowest_aggregate",
+    "run_with_restarts",
 ]

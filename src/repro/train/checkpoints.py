@@ -1,10 +1,28 @@
-"""Atomic, keep-k, elastic-restore checkpointing for pytrees.
+"""Atomic, durable, keep-k, elastic-restore checkpointing for pytrees.
 
 Layout per step:  <dir>/step_<n>/
     arrays.npz      — flat {path: array} of every leaf (host numpy)
-    structure.json  — treedef + dtypes + aux metadata (loader state, step, rng)
+    structure.json  — treedef + dtypes + aux metadata (loader state, step,
+                      rng) + per-leaf crc32 checksums
 A ``COMMIT`` marker file is written last; directories without it are treated
 as partial writes (e.g. a preemption mid-save) and ignored + garbage-collected.
+
+Durability ordering (what makes a crash at *any* instant recoverable):
+``arrays.npz`` and ``structure.json`` are fsynced, then ``COMMIT`` is
+written and fsynced, then the tmp directory itself is fsynced (so the
+marker's directory entry is durable), then the atomic rename into place,
+then the parent directory is fsynced (so the rename is durable). A power
+cut between any two steps leaves either no ``step_<n>`` entry or a
+COMMIT-less partial — both GC'd on the next manager construction — never a
+committed-but-torn checkpoint.
+
+Restore is **corruption-aware**: every checkpoint is validated before use
+(COMMIT present, ``structure.json`` parses, ``arrays.npz`` unzips, per-leaf
+crc32 matches). ``restore(step=None)`` walks committed steps newest-first
+and returns the first *valid* one, quarantining (deleting) invalid entries
+as it goes — a torn or bit-rotted latest checkpoint costs one save
+interval, not the run. An explicitly requested step that fails validation
+raises :class:`CheckpointCorruptionError`.
 
 Elastic restore: arrays are saved unsharded (host-gathered). ``restore`` takes
 optional ``shardings`` (a pytree of NamedSharding) and device_puts each leaf
@@ -18,6 +36,7 @@ import json
 import os
 import shutil
 import tempfile
+import zlib
 from typing import Any, Dict, Optional
 
 import jax
@@ -25,6 +44,12 @@ import jax.numpy as jnp
 import numpy as np
 
 COMMIT_MARKER = "COMMIT"
+
+
+class CheckpointCorruptionError(ValueError):
+    """A committed checkpoint failed validation (unreadable archive, missing
+    leaf, or crc32 mismatch). Raised only for an explicitly requested step;
+    latest-checkpoint restore skips invalid entries instead."""
 
 
 def select_replica(tree, index: int):
@@ -54,28 +79,61 @@ def _flatten_with_paths(tree):
     return out, treedef
 
 
+def _leaf_crc32(arr: np.ndarray) -> str:
+    return f"{zlib.crc32(np.ascontiguousarray(arr).tobytes()):08x}"
+
+
+def _fsync_file(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _fsync_dir(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
 class CheckpointManager:
-    def __init__(self, directory: str, keep: int = 3):
+    def __init__(self, directory: str, keep: int = 3, log_fn=print):
         self.directory = directory
         self.keep = keep
+        self.log_fn = log_fn
         os.makedirs(directory, exist_ok=True)
         self._gc_partial()
 
     # -- public API ---------------------------------------------------------------
     def save(self, step: int, tree: Any, aux: Optional[Dict] = None) -> str:
-        """Atomically write a checkpoint for ``step``."""
+        """Atomically + durably write a checkpoint for ``step`` (see module
+        docstring for the fsync/COMMIT/rename ordering)."""
         final_dir = self._step_dir(step)
         tmp_dir = tempfile.mkdtemp(prefix=f".tmp_step_{step}_", dir=self.directory)
         try:
             arrays, structure = self._to_host(tree)
-            np.savez(os.path.join(tmp_dir, "arrays.npz"), **arrays)
-            with open(os.path.join(tmp_dir, "structure.json"), "w") as f:
-                json.dump({"step": step, "aux": aux or {}, "keys": structure}, f)
+            checksums = {k: _leaf_crc32(v) for k, v in arrays.items()}
+            arrays_path = os.path.join(tmp_dir, "arrays.npz")
+            np.savez(arrays_path, **arrays)
+            _fsync_file(arrays_path)
+            structure_path = os.path.join(tmp_dir, "structure.json")
+            with open(structure_path, "w") as f:
+                json.dump({"step": step, "aux": aux or {}, "keys": structure,
+                           "checksums": checksums}, f)
+                f.flush()
+                os.fsync(f.fileno())
             with open(os.path.join(tmp_dir, COMMIT_MARKER), "w") as f:
                 f.write("ok")
+                f.flush()
+                os.fsync(f.fileno())
+            _fsync_dir(tmp_dir)
             if os.path.exists(final_dir):
                 shutil.rmtree(final_dir)
             os.rename(tmp_dir, final_dir)
+            _fsync_dir(self.directory)
         except BaseException:
             shutil.rmtree(tmp_dir, ignore_errors=True)
             raise
@@ -88,22 +146,36 @@ class CheckpointManager:
 
     def restore(self, step: Optional[int] = None, like: Any = None,
                 shardings: Any = None):
-        """Restore (tree, aux). ``like`` provides the pytree structure.
+        """Restore (tree, aux, step). ``like`` provides the pytree structure.
+
+        With ``step=None`` the newest committed checkpoint that passes
+        validation wins; invalid ones (torn archive, crc mismatch) are
+        logged and deleted so they can't shadow an older good save. An
+        explicit ``step`` that fails validation raises
+        :class:`CheckpointCorruptionError` — the caller asked for *that*
+        state, so silently substituting another would be wrong.
 
         If ``shardings`` is given (pytree of NamedSharding matching ``like``),
         every leaf is device_put with its sharding — elastic restore onto a
         different mesh.
         """
         if step is None:
-            step = self.latest_step()
-        if step is None:
-            raise FileNotFoundError(f"no committed checkpoints in {self.directory}")
-        d = self._step_dir(step)
-        with open(os.path.join(d, "structure.json")) as f:
-            meta = json.load(f)
-        arrays = np.load(os.path.join(d, "arrays.npz"))
+            meta = arrays = None
+            for cand in sorted(self._committed_steps(), reverse=True):
+                try:
+                    meta, arrays = self._load_validated(cand)
+                    break
+                except CheckpointCorruptionError as e:
+                    self.log_fn(f"[checkpoints] step {cand} is corrupt "
+                                f"({e}); deleting and falling back")
+                    shutil.rmtree(self._step_dir(cand), ignore_errors=True)
+            if meta is None:
+                raise FileNotFoundError(
+                    f"no valid committed checkpoints in {self.directory}")
+        else:
+            meta, arrays = self._load_validated(step)
         if like is None:
-            tree = {k: arrays[k] for k in arrays.files}
+            tree = dict(arrays)
         else:
             flat, treedef = _flatten_with_paths(like)
             leaves = []
@@ -123,6 +195,43 @@ class CheckpointManager:
         return tree, meta["aux"], meta["step"]
 
     # -- internals -----------------------------------------------------------------
+    def _load_validated(self, step: int):
+        """Load + validate one committed checkpoint → (meta, {key: array}).
+
+        Validation: COMMIT marker present, structure.json parses, arrays.npz
+        opens and every member decompresses (the zip layer checks its own
+        crc), and — for checkpoints that recorded them — per-leaf crc32
+        matches. Pre-checksum checkpoints (no "checksums" key) stay
+        restorable. Any failure raises CheckpointCorruptionError.
+        """
+        d = self._step_dir(step)
+        if not os.path.exists(os.path.join(d, COMMIT_MARKER)):
+            raise CheckpointCorruptionError(f"step {step}: no COMMIT marker")
+        try:
+            with open(os.path.join(d, "structure.json")) as f:
+                meta = json.load(f)
+        except (OSError, ValueError) as e:
+            raise CheckpointCorruptionError(
+                f"step {step}: unreadable structure.json ({e})") from e
+        try:
+            with np.load(os.path.join(d, "arrays.npz")) as npz:
+                arrays = {k: npz[k] for k in npz.files}
+        except Exception as e:
+            raise CheckpointCorruptionError(
+                f"step {step}: unreadable arrays.npz ({e})") from e
+        checksums = meta.get("checksums")
+        if checksums is not None:
+            for key, want in checksums.items():
+                if key not in arrays:
+                    raise CheckpointCorruptionError(
+                        f"step {step}: leaf {key!r} missing from arrays.npz")
+                got = _leaf_crc32(arrays[key])
+                if got != want:
+                    raise CheckpointCorruptionError(
+                        f"step {step}: crc mismatch on leaf {key!r} "
+                        f"(recorded {want}, found {got})")
+        return meta, arrays
+
     def _step_dir(self, step: int) -> str:
         return os.path.join(self.directory, f"step_{step:010d}")
 

@@ -41,6 +41,18 @@ them one at a time. The engine replaces it with a chunked execution core:
   step). Per-step losses come back as an ``(n, R)`` device array.
   Memory cost is R× params/opt-state but 1× data. The ``replicas=None``
   path is byte-for-byte the PR-4 engine (pinned by tests).
+* **Non-finite guard** — ``nonfinite_guard=True`` hardens every scanned
+  step: the loss and every gradient leaf are reduced to one on-device
+  finiteness flag, and a per-leaf ``where`` carries the previous
+  ``(params, opt_state)`` through unchanged when the flag is false. The
+  step is *skipped*, not retried — one poisoned batch costs one step of
+  progress instead of a dead run — and the skip flag rides back with the
+  per-step losses (``{"loss", "skipped"}``) so the trainer can count
+  skips without a host sync. Composes with every mode above: the scan
+  carries the selected state, vmapped replicas each get their own flag,
+  the mesh sees only elementwise selects, and the sparse path's scatter
+  results are discarded by the same select. Guard off is byte-for-byte
+  the unguarded engine.
 """
 from __future__ import annotations
 
@@ -119,7 +131,8 @@ class TrainEngine:
                  mesh=None, sparse_tables: bool = False,
                  sparse_table_kwargs: Optional[Dict[str, Any]] = None,
                  loss_fn: Optional[Callable] = None,
-                 replicas: Optional[int] = None):
+                 replicas: Optional[int] = None,
+                 nonfinite_guard: bool = False):
         if chunk_batches < 1:
             raise ValueError(f"chunk_batches must be >= 1, got {chunk_batches}")
         if replicas is not None and replicas < 1:
@@ -129,6 +142,7 @@ class TrainEngine:
         self.chunk_batches = int(chunk_batches)
         self.mesh = mesh
         self.replicas = None if replicas is None else int(replicas)
+        self.nonfinite_guard = bool(nonfinite_guard)
         self.loss_fn = loss_fn or model.compute_loss
         self.sparse_parts = discover_sparse_tables(model) if sparse_tables else {}
         if self.sparse_parts:
@@ -147,7 +161,9 @@ class TrainEngine:
         else:
             self.sparse_kwargs = {}
         if self.replicas is None:
-            self._step = jax.jit(self._chunk_step, donate_argnums=(0, 1))
+            chunk_fn = (self._chunk_step_guarded if self.nonfinite_guard
+                        else self._chunk_step)
+            self._step = jax.jit(chunk_fn, donate_argnums=(0, 1))
         else:
             # Two compiled variants: the all-active fast path skips the
             # per-leaf freeze select entirely (the whole sweep until the
@@ -259,12 +275,10 @@ class TrainEngine:
         return params, opt_state
 
     # -- the scanned step ------------------------------------------------------
-    def _one_step(self, params, opt_state, batch):
-        loss, grads = jax.value_and_grad(self.loss_fn)(params, batch)
+    def _apply_update(self, params, opt_state, grads, batch):
         if not self.sparse_parts:
             updates, opt_state = self.optimizer.update(grads, opt_state, params)
-            params = optim_lib.apply_updates(params, updates)
-            return params, opt_state, loss
+            return optim_lib.apply_updates(params, updates), opt_state
         # Sparse route: mask table leaves out of the dense update (None is an
         # empty pytree node, so the dense optimizer never touches them), then
         # scatter-update each table from the batch's unique rows.
@@ -291,7 +305,37 @@ class TrainEngine:
                 d_table.at[rows].get(mode="clip"), **self.sparse_kwargs)
             new_params = _tree_set(new_params, path, new_table)
             sparse_state[key] = st
-        return new_params, {"dense": dense_state, "sparse": sparse_state}, loss
+        return new_params, {"dense": dense_state, "sparse": sparse_state}
+
+    def _one_step(self, params, opt_state, batch):
+        loss, grads = jax.value_and_grad(self.loss_fn)(params, batch)
+        params, opt_state = self._apply_update(params, opt_state, grads, batch)
+        return params, opt_state, loss
+
+    def _guarded_one_step(self, params, opt_state, batch):
+        """One step that survives a non-finite loss or gradient.
+
+        Finiteness of the loss and of every gradient leaf is reduced to one
+        on-device scalar ``ok``; the update is computed unconditionally (a
+        ``cond`` would break vmap/batching) and a per-leaf ``where`` carries
+        the *old* params and opt_state through when ``ok`` is false — the
+        poisoned step is skipped in place, with no host sync and no retrace.
+        Returns the loss (non-finite on a skipped step — the trainer drains
+        it as telemetry, not into the epoch mean) and the skip flag.
+        """
+        loss, grads = jax.value_and_grad(self.loss_fn)(params, batch)
+        ok = jnp.isfinite(loss)
+        for leaf in jax.tree_util.tree_leaves(grads):
+            ok = ok & jnp.all(jnp.isfinite(leaf))
+        new_params, new_opt = self._apply_update(params, opt_state, grads,
+                                                 batch)
+
+        def keep(new, old):
+            return jnp.where(ok, new, old)
+
+        params = jax.tree_util.tree_map(keep, new_params, params)
+        opt_state = jax.tree_util.tree_map(keep, new_opt, opt_state)
+        return params, opt_state, loss, ~ok
 
     def _chunk_step(self, params, opt_state, chunk):
         def body(carry, batch):
@@ -303,12 +347,32 @@ class TrainEngine:
             body, (params, opt_state), chunk)
         return params, opt_state, losses
 
+    def _chunk_step_guarded(self, params, opt_state, chunk):
+        def body(carry, batch):
+            params, opt_state = carry
+            params, opt_state, loss, skipped = self._guarded_one_step(
+                params, opt_state, batch)
+            return (params, opt_state), {"loss": loss, "skipped": skipped}
+
+        (params, opt_state), telemetry = jax.lax.scan(
+            body, (params, opt_state), chunk)
+        return params, opt_state, telemetry
+
     # -- the vmapped replica step ----------------------------------------------
     def _replica_one_step(self, params, opt_state, batch, active):
-        new_p, new_o, loss = jax.vmap(
-            self._one_step, in_axes=(0, 0, None))(params, opt_state, batch)
+        if self.nonfinite_guard:
+            # vmapping the guarded step gives each replica its own on-device
+            # ok flag: a NaN batch (broadcast to all replicas) or a replica
+            # whose own trajectory diverged skips only where it is non-finite.
+            new_p, new_o, loss, skipped = jax.vmap(
+                self._guarded_one_step,
+                in_axes=(0, 0, None))(params, opt_state, batch)
+        else:
+            new_p, new_o, loss = jax.vmap(
+                self._one_step, in_axes=(0, 0, None))(params, opt_state, batch)
+            skipped = None
         if active is None:
-            return new_p, new_o, loss
+            return new_p, new_o, loss, skipped
 
         def keep(new, old):
             # Freeze inactive replicas in place: expand the (R,) mask to the
@@ -320,14 +384,19 @@ class TrainEngine:
 
         params = jax.tree_util.tree_map(keep, new_p, params)
         opt_state = jax.tree_util.tree_map(keep, new_o, opt_state)
-        return params, opt_state, loss
+        if skipped is not None:
+            # A frozen replica attempted no update — don't report it skipped.
+            skipped = skipped & active
+        return params, opt_state, loss, skipped
 
     def _replica_chunk_body(self, params, opt_state, chunk, active):
         def body(carry, batch):
             params, opt_state = carry
-            params, opt_state, loss = self._replica_one_step(
+            params, opt_state, loss, skipped = self._replica_one_step(
                 params, opt_state, batch, active)
-            return (params, opt_state), loss
+            ys = (loss if skipped is None
+                  else {"loss": loss, "skipped": skipped})
+            return (params, opt_state), ys
 
         (params, opt_state), losses = jax.lax.scan(
             body, (params, opt_state), chunk)
@@ -345,7 +414,10 @@ class TrainEngine:
         Donates ``(params, opt_state)``; returns the new state plus the
         per-step loss array — ``(n,)``, or ``(n, R)`` with ``replicas=R`` —
         still on device: do not block on it before dispatching the next
-        chunk.
+        chunk. With ``nonfinite_guard=True`` the loss payload is instead a
+        dict ``{"loss": (n,)|(n, R), "skipped": same-shape bool}`` where
+        ``skipped[i]`` marks a step whose non-finite loss/grads were
+        discarded (params and opt_state carried through unchanged).
 
         With replicas, ``active`` is an optional ``(R,)`` bool mask (default
         all-on): inactive replicas' state is frozen in place. An all-true

@@ -1,21 +1,24 @@
-"""Fault tolerance: preemption handling + straggler mitigation.
+"""Fault tolerance: preemption handling, restarts, straggler mitigation.
 
 At 1000+ node scale three failure classes dominate:
 
 1. **Preemption / node loss** — handled by frequent atomic checkpoints
    (params + optimizer + loader + rng) and resume-on-restart. The
    :class:`PreemptionHandler` converts SIGTERM/SIGINT into a final checkpoint
-   and a clean exit so the scheduler can reschedule the job.
+   and a clean exit so the scheduler can reschedule the job;
+   :func:`run_with_restarts` is the outer supervisor that relaunches a
+   crashed training process so it resumes from its newest valid checkpoint
+   (``repro.launch.train --max-restarts`` wires it to the CLI).
 
 2. **Stragglers** — the step barrier (gradient all-reduce) runs at the speed
-   of the slowest replica. Mitigations implemented/designed here:
+   of the slowest replica. Two host-side mitigations:
      * drop-slowest-k aggregation: aggregate the first (R - k) replica
-       gradients and rescale by R/(R-k) — unbiased in expectation under
-       random straggling (:func:`drop_slowest_aggregate` simulates the
-       arithmetic; on real pods the collection uses a timeout barrier).
-     * backup replicas: schedule cloned data shards on spare nodes, take the
-       first result (design note — needs scheduler support, not simulatable
-       in-process).
+       gradients and rescale — unbiased in expectation under random
+       straggling (:func:`drop_slowest_aggregate`; on real pods the
+       collection uses a timeout barrier).
+     * :class:`StepWatchdog`: flags steps that blow a wall-clock budget (the
+       Trainer's ``step_budget_seconds`` knob) so stuck collectives show up
+       in telemetry instead of silently stretching the run.
 
 3. **Elastic scaling** — checkpoints are mesh-agnostic (host numpy), so a job
    restarted on a different device count re-shards at restore time
@@ -24,6 +27,8 @@ At 1000+ node scale three failure classes dominate:
 from __future__ import annotations
 
 import signal
+import subprocess
+import sys
 from typing import Callable, Optional, Sequence
 
 import jax
@@ -31,17 +36,19 @@ import jax.numpy as jnp
 
 
 class PreemptionHandler:
-    """Converts SIGTERM/SIGINT into a `should_stop` flag the train loop polls.
+    """Converts SIGTERM/SIGINT into a ``should_stop`` flag the train loop
+    polls. A context manager, so the previous signal handlers are restored
+    even when the loop raises:
 
-    Usage:
-        handler = PreemptionHandler()
-        for batch in loader:
-            ...
-            if handler.should_stop:   # checkpoint + exit cleanly
-                ckpt.save(step, state); break
+        with PreemptionHandler() as handler:
+            for batch in loader:
+                ...
+                if handler.should_stop:   # checkpoint + exit cleanly
+                    ckpt.save(step, state); break
     """
 
-    def __init__(self, signals: Sequence[int] = (signal.SIGTERM,)):
+    def __init__(self,
+                 signals: Sequence[int] = (signal.SIGTERM, signal.SIGINT)):
         self.should_stop = False
         self._prev = {}
         for sig in signals:
@@ -54,6 +61,44 @@ class PreemptionHandler:
     def restore(self):
         for sig, prev in self._prev.items():
             signal.signal(sig, prev)
+        self._prev = {}
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        self.restore()
+        return False
+
+
+def run_with_restarts(argv: Sequence[str], max_restarts: int,
+                      log_fn: Callable = print, env=None) -> int:
+    """Supervise a training subprocess, relaunching it after crashes.
+
+    Runs ``argv`` (e.g. ``[sys.executable, "-m", "repro.launch.train",
+    ...]``); a non-zero exit — SIGKILL'd by the OOM killer, preempted,
+    segfaulted — triggers a relaunch with the *same* argv, up to
+    ``max_restarts`` times. The child is responsible for resuming from its
+    checkpoint directory (``--ckpt-dir`` does this automatically), which is
+    what makes blind relaunch correct: every attempt converges on the same
+    deterministic run. Exit code 0 stops the loop; the final attempt's code
+    is returned either way.
+    """
+    attempt = 0
+    while True:
+        proc = subprocess.run(list(argv), env=env)
+        if proc.returncode == 0:
+            if attempt:
+                log_fn(f"[restarts] completed after {attempt} restart(s)")
+            return 0
+        if attempt >= max_restarts:
+            log_fn(f"[restarts] attempt {attempt + 1} exited with code "
+                   f"{proc.returncode}; restart budget ({max_restarts}) "
+                   f"exhausted")
+            return proc.returncode
+        attempt += 1
+        log_fn(f"[restarts] child exited with code {proc.returncode}; "
+               f"relaunching (attempt {attempt + 1}/{max_restarts + 1})")
 
 
 def drop_slowest_aggregate(replica_grads: Sequence, arrived: Sequence[bool]):
@@ -75,10 +120,11 @@ def drop_slowest_aggregate(replica_grads: Sequence, arrived: Sequence[bool]):
 class StepWatchdog:
     """Detects stuck steps by wall-clock budget (host-side straggler guard).
 
-    On real clusters this wraps the collective with a deadline; here it is the
-    host-side reference implementation used by the Trainer to flag stragglers
-    in logs and (optionally) trigger a checkpoint so the scheduler can
-    migrate the job.
+    The Trainer creates one when ``step_budget_seconds`` is set and calls
+    ``check`` with each chunk's mean per-step time; violations are counted
+    into the epoch record (``watchdog_violations``) and reported through
+    ``on_violation`` so a stuck collective shows up instead of silently
+    stretching the run.
     """
 
     def __init__(self, budget_seconds: float, on_violation: Optional[Callable] = None):

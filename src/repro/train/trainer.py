@@ -40,7 +40,7 @@ from repro.core.metrics import (ConditionalPerplexity, LogLikelihood, MultiMetri
 from repro.data.loader import DevicePrefetcher
 from repro.train.checkpoints import CheckpointManager
 from repro.train.engine import TrainEngine
-from repro.train.fault_tolerance import PreemptionHandler
+from repro.train.fault_tolerance import PreemptionHandler, StepWatchdog
 
 
 @dataclasses.dataclass
@@ -73,7 +73,9 @@ class Trainer:
                  sparse_table_kwargs: Optional[Dict[str, Any]] = None,
                  replicas: Optional[int] = None,
                  replica_lrs: Optional[List[float]] = None,
-                 replica_seeds: Optional[List[int]] = None):
+                 replica_seeds: Optional[List[int]] = None,
+                 nonfinite_guard: bool = False,
+                 step_budget_seconds: Optional[float] = None):
         self.optimizer = optimizer
         self.epochs = epochs
         self.patience = patience
@@ -81,9 +83,12 @@ class Trainer:
         self.metrics_factory = metrics_factory
         self.log_fn = log_fn
         self.checkpoint_every_steps = checkpoint_every_steps
-        self.ckpt = (CheckpointManager(checkpoint_dir, keep=keep_checkpoints)
+        self.ckpt = (CheckpointManager(checkpoint_dir, keep=keep_checkpoints,
+                                       log_fn=log_fn)
                      if checkpoint_dir else None)
         self.handle_preemption = handle_preemption
+        self.nonfinite_guard = nonfinite_guard
+        self.step_budget_seconds = step_budget_seconds
         self.chunk_batches = chunk_batches
         self.mesh = mesh
         self.sparse_tables = sparse_tables
@@ -111,7 +116,8 @@ class Trainer:
                            chunk_batches=self.chunk_batches, mesh=self.mesh,
                            sparse_tables=self.sparse_tables,
                            sparse_table_kwargs=self.sparse_table_kwargs,
-                           replicas=self.replicas)
+                           replicas=self.replicas,
+                           nonfinite_guard=self.nonfinite_guard)
 
     def _eval_update_fn(self, model, metrics, replicas=None):
         def eval_step(params, state, batch):
@@ -183,6 +189,8 @@ class Trainer:
                                                        self.replica_lrs)
             state = TrainState(params=params, opt_state=opt_state)
         resumed_early_stop = None
+        resume_accum = None
+        history: List[Dict[str, float]] = []
         if resume and self.ckpt and self.ckpt.latest_step() is not None:
             tree = {"params": state.params, "opt_state": state.opt_state}
             tree, aux, _ = self.ckpt.restore(like=tree)
@@ -190,6 +198,12 @@ class Trainer:
                                epoch=int(aux["epoch"]),
                                global_step=int(aux["global_step"]))
             resumed_early_stop = aux.get("early_stop")
+            # Mid-epoch crash recovery: the checkpoint carries the epoch's
+            # running loss accumulators and the completed-epoch history, so
+            # the resumed run's returned history is identical to an
+            # uninterrupted run's — not just from-here-on.
+            resume_accum = aux.get("epoch_accum")
+            history = [dict(r) for r in aux.get("history") or []]
             if aux.get("loader") is not None and hasattr(train_loader,
                                                          "load_state_dict"):
                 train_loader.load_state_dict(aux["loader"])
@@ -210,7 +224,12 @@ class Trainer:
                 f"{dp}-way data axis (same rule as multi-host streaming)")
 
         preempt = PreemptionHandler() if self.handle_preemption else None
-        history: List[Dict[str, float]] = []
+        watchdog = (StepWatchdog(
+            self.step_budget_seconds,
+            on_violation=lambda step, sec: self.log_fn(
+                f"[trainer] watchdog: step ~{step} averaged {sec:.3f}s/step, "
+                f"over budget {self.step_budget_seconds}s"))
+            if self.step_budget_seconds else None)
         if R is None:
             best_val = float("inf")
             bad_epochs = 0
@@ -250,126 +269,201 @@ class Trainer:
 
         snapshot_early_stop()
 
-        while state.epoch < self.epochs:
-            t0 = time.time()
-            n_batches = 0
-            train_loss = 0.0 if R is None else np.zeros(R, np.float64)
-            epoch_active = None if R is None else active.copy()
-            # One jit dispatch per chunk of up to `chunk_batches` steps; the
-            # previous chunk's on-device (n,) — or (n, R) — loss array is
-            # drained while the current chunk runs, so the host never blocks
-            # on the step it just dispatched. loader_state is the bit-exact
-            # resume point after the chunk's last batch (the loader itself
-            # has run ahead by the prefetch depth).
-            pending_losses = None
-            stop = False
+        # Signal handlers must not outlive the loop they guard:
+        # restore on every exit path (completion, early stop,
+        # preemption return, exception).
+        try:
+            while state.epoch < self.epochs:
+                t0 = time.time()
+                n_batches = 0
+                train_loss = 0.0 if R is None else np.zeros(R, np.float64)
+                skipped_steps = 0 if R is None else np.zeros(R, np.int64)
+                wd_epoch_start = watchdog.violations if watchdog else 0
+                if resume_accum is not None:
+                    # First epoch after a mid-epoch resume: start from the
+                    # checkpointed accumulators so the epoch's recorded loss
+                    # covers every batch, not just the post-crash ones.
+                    if R is None:
+                        train_loss = float(resume_accum["train_loss"])
+                        skipped_steps = int(resume_accum.get("skipped", 0))
+                    else:
+                        train_loss = np.asarray(resume_accum["train_loss"],
+                                                np.float64)
+                        skipped_steps = np.asarray(
+                            resume_accum.get("skipped", [0] * R), np.int64)
+                    n_batches = int(resume_accum["n_batches"])
+                    resume_accum = None
+                epoch_active = None if R is None else active.copy()
+                # One jit dispatch per chunk of up to `chunk_batches` steps; the
+                # previous chunk's on-device (n,) — or (n, R) — loss array is
+                # drained while the current chunk runs, so the host never blocks
+                # on the step it just dispatched. loader_state is the bit-exact
+                # resume point after the chunk's last batch (the loader itself
+                # has run ahead by the prefetch depth).
+                pending_losses = None
+                stop = False
 
-            def drain(losses):
-                nonlocal train_loss
-                if R is None:
-                    # Per-element accumulation into the python float keeps
-                    # the sum bit-identical to the historical one-
-                    # float(loss)-per-step loop (a vectorized f32 sum would
-                    # not).
-                    for loss in np.asarray(losses):
-                        train_loss += float(loss)
-                else:
-                    train_loss += np.asarray(losses, np.float64).sum(axis=0)
+                def drain(payload):
+                    # With nonfinite_guard the engine's telemetry is a dict:
+                    # per-step losses plus a same-shaped skipped mask. A skipped
+                    # step's loss is the non-finite value that triggered the
+                    # skip — it must not poison the epoch mean, so it counts
+                    # into skipped_steps instead of train_loss.
+                    nonlocal train_loss, skipped_steps
+                    if isinstance(payload, dict):
+                        losses = payload["loss"]
+                        skipped = np.asarray(payload["skipped"])
+                    else:
+                        losses, skipped = payload, None
+                    if R is None:
+                        # Per-element accumulation into the python float keeps
+                        # the sum bit-identical to the historical one-
+                        # float(loss)-per-step loop (a vectorized f32 sum would
+                        # not).
+                        if skipped is None:
+                            for loss in np.asarray(losses):
+                                train_loss += float(loss)
+                        else:
+                            for loss, skip in zip(np.asarray(losses), skipped):
+                                if skip:
+                                    skipped_steps += 1
+                                else:
+                                    train_loss += float(loss)
+                    else:
+                        arr = np.asarray(losses, np.float64)
+                        if skipped is None:
+                            train_loss += arr.sum(axis=0)
+                        else:
+                            train_loss += np.where(skipped, 0.0, arr).sum(axis=0)
+                            skipped_steps += skipped.sum(axis=0)
 
-            for chunk, loader_state, n in DevicePrefetcher(
-                    train_loader, chunk_batches=engine.chunk_batches,
-                    device=engine.batch_sharding()):
-                if R is None:
-                    state.params, state.opt_state, losses = engine.step(
-                        state.params, state.opt_state, chunk)
-                else:
-                    state.params, state.opt_state, losses = engine.step(
-                        state.params, state.opt_state, chunk,
-                        active=epoch_active)
+                chunk_t0 = time.time()
+                for chunk, loader_state, n in DevicePrefetcher(
+                        train_loader, chunk_batches=engine.chunk_batches,
+                        device=engine.batch_sharding()):
+                    if R is None:
+                        state.params, state.opt_state, losses = engine.step(
+                            state.params, state.opt_state, chunk)
+                    else:
+                        state.params, state.opt_state, losses = engine.step(
+                            state.params, state.opt_state, chunk,
+                            active=epoch_active)
+                    if pending_losses is not None:
+                        drain(pending_losses)
+                    pending_losses = losses
+                    n_batches += n
+                    prev_step = state.global_step
+                    state.global_step += n
+                    if watchdog is not None:
+                        now = time.time()
+                        watchdog.check((now - chunk_t0) / max(n, 1),
+                                       state.global_step)
+                        chunk_t0 = now
+                    every = self.checkpoint_every_steps
+                    save_now = bool(self.ckpt and every and
+                                    prev_step // every < state.global_step // every)
+                    preempted = preempt is not None and preempt.should_stop
+                    if save_now or (preempted and self.ckpt):
+                        # A mid-epoch checkpoint's accumulators must cover
+                        # exactly the batches its loader cursor has passed:
+                        # drain the in-flight chunk before snapshotting (the
+                        # one host sync a checkpoint costs).
+                        drain(pending_losses)
+                        pending_losses = None
+                        self._save(state, train_loader, loader_state,
+                                   epoch_accum=self._accum_aux(
+                                       R, train_loss, n_batches, skipped_steps),
+                                   history=history)
+                    if preempted:
+                        if self.ckpt:
+                            self.log_fn("[trainer] preempted; checkpoint written")
+                        else:
+                            self.log_fn("[trainer] preempted; no checkpoint_dir "
+                                        "configured — stopping without saving")
+                        stop = True
+                        break
                 if pending_losses is not None:
                     drain(pending_losses)
-                pending_losses = losses
-                n_batches += n
-                prev_step = state.global_step
-                state.global_step += n
-                every = self.checkpoint_every_steps
-                if (self.ckpt and every and
-                        prev_step // every < state.global_step // every):
-                    self._save(state, train_loader, loader_state)
-                if preempt and preempt.should_stop:
-                    if self.ckpt:
-                        self._save(state, train_loader, loader_state)
-                        self.log_fn("[trainer] preempted; checkpoint written")
+                if stop:
+                    # preempted: leave _final_state usable (test() after a
+                    # preempted train must not crash) and hand back history
+                    self._final_state = state
+                    return history
+                state.epoch += 1
+                # Skipped (non-finite) steps contributed no loss; the mean is
+                # over the steps that actually updated. Guard off → skipped is
+                # identically zero and this is the historical denominator.
+                denom = (max(n_batches - skipped_steps, 1) if R is None
+                         else np.maximum(n_batches - skipped_steps, 1))
+                mean_loss = train_loss / denom
+                record = {
+                    "epoch": state.epoch,
+                    "train_loss": (mean_loss if R is None else mean_loss.tolist()),
+                    "seconds": time.time() - t0,
+                }
+                if self.nonfinite_guard:
+                    record["skipped_steps"] = (int(skipped_steps) if R is None
+                                               else np.asarray(skipped_steps)
+                                               .tolist())
+                if watchdog is not None:
+                    record["watchdog_violations"] = (watchdog.violations
+                                                     - wd_epoch_start)
+                if R is not None:
+                    record["active"] = epoch_active.tolist()
+                if val_loader is not None:
+                    val = self.evaluate(model, state.params, val_loader,
+                                        replicas=R)
+                    record.update({f"val_{k}": v for k, v in val.items()})
+                    if R is None:
+                        val_loss = -val["ll"]
+                        if val_loss < best_val - 1e-6:
+                            best_val, bad_epochs = val_loss, 0
+                        else:
+                            bad_epochs += 1
                     else:
-                        self.log_fn("[trainer] preempted; no checkpoint_dir "
-                                    "configured — stopping without saving")
-                    stop = True
+                        # Same rule as the scalar path, applied elementwise to
+                        # the replicas still training; finished replicas keep
+                        # their counters (their metrics no longer move).
+                        val_loss = -np.asarray(val["ll"], np.float64)
+                        improved = val_loss < best_val - 1e-6
+                        best_val = np.where(improved & active, val_loss, best_val)
+                        bad_epochs = np.where(improved & active, 0,
+                                              bad_epochs + active.astype(int))
+                history.append(record)
+                self.log_fn(f"[trainer] {record}")
+                # Resolve stopping BEFORE the end-of-epoch checkpoint so the
+                # saved early-stop state (incl. the updated active mask) is the
+                # one the next epoch would train under.
+                stop_now = False
+                if val_loader is not None:
+                    if R is None:
+                        stop_now = bad_epochs >= self.patience
+                    else:
+                        stopping = active & (bad_epochs >= self.patience)
+                        if stopping.any():
+                            active = active & ~stopping
+                            self.log_fn(
+                                f"[trainer] replicas "
+                                f"{np.flatnonzero(stopping).tolist()} early-stop "
+                                f"at epoch {state.epoch} "
+                                f"({int(active.sum())}/{R} still training)")
+                        stop_now = not active.any()
+                snapshot_early_stop()
+                if self.ckpt:
+                    # End-of-epoch: loader cursor is at the next epoch's start,
+                    # so the saved accumulators are a fresh epoch's (None).
+                    self._save(state, train_loader, history=history)
+                if stop_now:
+                    self.log_fn(f"[trainer] early stop at epoch {state.epoch}"
+                                if R is None else
+                                f"[trainer] all replicas stopped at epoch "
+                                f"{state.epoch}")
                     break
-            if pending_losses is not None:
-                drain(pending_losses)
-            if stop:
-                # preempted: leave _final_state usable (test() after a
-                # preempted train must not crash) and hand back history
-                self._final_state = state
-                return history
-            state.epoch += 1
-            mean_loss = train_loss / max(n_batches, 1)
-            record = {
-                "epoch": state.epoch,
-                "train_loss": (mean_loss if R is None else mean_loss.tolist()),
-                "seconds": time.time() - t0,
-            }
-            if R is not None:
-                record["active"] = epoch_active.tolist()
-            if val_loader is not None:
-                val = self.evaluate(model, state.params, val_loader,
-                                    replicas=R)
-                record.update({f"val_{k}": v for k, v in val.items()})
-                if R is None:
-                    val_loss = -val["ll"]
-                    if val_loss < best_val - 1e-6:
-                        best_val, bad_epochs = val_loss, 0
-                    else:
-                        bad_epochs += 1
-                else:
-                    # Same rule as the scalar path, applied elementwise to
-                    # the replicas still training; finished replicas keep
-                    # their counters (their metrics no longer move).
-                    val_loss = -np.asarray(val["ll"], np.float64)
-                    improved = val_loss < best_val - 1e-6
-                    best_val = np.where(improved & active, val_loss, best_val)
-                    bad_epochs = np.where(improved & active, 0,
-                                          bad_epochs + active.astype(int))
-            history.append(record)
-            self.log_fn(f"[trainer] {record}")
-            # Resolve stopping BEFORE the end-of-epoch checkpoint so the
-            # saved early-stop state (incl. the updated active mask) is the
-            # one the next epoch would train under.
-            stop_now = False
-            if val_loader is not None:
-                if R is None:
-                    stop_now = bad_epochs >= self.patience
-                else:
-                    stopping = active & (bad_epochs >= self.patience)
-                    if stopping.any():
-                        active = active & ~stopping
-                        self.log_fn(
-                            f"[trainer] replicas "
-                            f"{np.flatnonzero(stopping).tolist()} early-stop "
-                            f"at epoch {state.epoch} "
-                            f"({int(active.sum())}/{R} still training)")
-                    stop_now = not active.any()
-            snapshot_early_stop()
-            if self.ckpt:
-                self._save(state, train_loader)
-            if stop_now:
-                self.log_fn(f"[trainer] early stop at epoch {state.epoch}"
-                            if R is None else
-                            f"[trainer] all replicas stopped at epoch "
-                            f"{state.epoch}")
-                break
-        self._final_state = state
-        return history
+            self._final_state = state
+            return history
+        finally:
+            if preempt is not None:
+                preempt.restore()
 
     def evaluate(self, model, params, loader, per_rank: bool = False,
                  replicas: Optional[int] = None):
@@ -457,7 +551,20 @@ class Trainer:
                              replicas=replicas)
 
     # -- internals -------------------------------------------------------------------
-    def _save(self, state: TrainState, loader, loader_state=None):
+    @staticmethod
+    def _accum_aux(R, train_loss, n_batches, skipped_steps):
+        """JSON-able mid-epoch loss accumulators for checkpoint aux. Python
+        floats round-trip json exactly (repr-based), so a resumed epoch's
+        loss sum stays bit-identical to an uninterrupted run's."""
+        if R is None:
+            return {"train_loss": train_loss, "n_batches": int(n_batches),
+                    "skipped": int(skipped_steps)}
+        return {"train_loss": np.asarray(train_loss, np.float64).tolist(),
+                "n_batches": int(n_batches),
+                "skipped": np.asarray(skipped_steps).tolist()}
+
+    def _save(self, state: TrainState, loader, loader_state=None,
+              epoch_accum=None, history=None):
         if loader_state is None:
             get_state = getattr(loader, "state_dict", lambda: None)
             loader_state = get_state()
@@ -466,4 +573,6 @@ class Trainer:
                        aux={"epoch": state.epoch, "global_step": state.global_step,
                             "loader": loader_state,
                             "early_stop": getattr(self, "_early_stop_aux",
-                                                  None)})
+                                                  None),
+                            "epoch_accum": epoch_accum,
+                            "history": history or []})

@@ -252,9 +252,12 @@ def test_sweep_resume_keeps_stopped_replicas_frozen(tmp_path, pbm_log):
     interrupted.train(_model(cfg), mk_train(), mk_val())
     resumed = make_trainer(epochs, ckpt_dir=str(tmp_path / "sweep"))
     h_resumed = resumed.train(_model(cfg), mk_train(), mk_val(), resume=True)
-    # the stopped replica stays inactive from the first resumed epoch on
-    assert h_resumed[0]["active"] == h_full[e0]["active"]
-    assert len(h_resumed) == len(h_full) - e0
+    # history is restored from the checkpoint, so the resumed run returns
+    # the full record and the stopped replica stays inactive from the first
+    # resumed epoch on
+    assert len(h_resumed) == len(h_full)
+    assert h_resumed[e0]["active"] == h_full[e0]["active"]
+    assert [r["active"] for r in h_resumed] == [r["active"] for r in h_full]
     _assert_trees_equal(full._final_state.params,
                         resumed._final_state.params)
 
