@@ -1,0 +1,154 @@
+"""Fused examination_nll vs the PR 1 composition: walltime + roofline.
+
+The chain-family hot path used to be three stages — conditional death-odds
+scan (``conditional_examination_odds``), per-position conditional log-probs,
+``log_bce`` + ``masked_mean`` — each materializing a (B, K) intermediate.
+The fused ``examination_nll`` kernel does factors -> capped affine scan ->
+NLL in one pass. This benchmark times both (interleaved best-of, same
+protocol as bench_recursions.py) for the ``ref`` and ``xla`` impls (plus
+``pallas`` where it runs), in value and value_and_grad mode, and runs both
+through the :mod:`repro.launch.hlo_cost` static cost model so the memory-
+traffic win is recorded alongside walltime.
+
+Writes BENCH_kernels.json next to this file (or --out). ``--check-roofline``
+exits non-zero if the fused xla path moves more bytes than the composition —
+the CI guard against the fusion silently regressing into extra traffic.
+
+Run: PYTHONPATH=src python benchmarks/bench_kernels.py [--batch 4096]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Allow running without PYTHONPATH=src.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from bench_recursions import timed_pair  # noqa: E402
+
+from repro.core.base import masked_mean  # noqa: E402
+from repro.core.recursions import conditional_examination_odds  # noqa: E402
+from repro.kernels import examination_nll  # noqa: E402
+from repro.launch.hlo_cost import analyze_hlo  # noqa: E402
+from repro.stable import log_bce  # noqa: E402
+
+
+def make_inputs(b, k, seed=0):
+    """Logits + SDBN-shaped conditional-chain factors (all valid probs)."""
+    rng = np.random.default_rng(seed)
+    n_real = rng.integers(max(1, k // 2), k + 1, size=b)
+    f32 = lambda a: jnp.asarray(a.astype(np.float32))
+    return (f32(rng.normal(size=(b, k)) * 3),                      # x
+            f32((rng.random((b, k)) < 0.3).astype(np.float32)),    # clicks
+            jnp.asarray(np.arange(k)[None, :] < n_real[:, None]),  # mask
+            f32(rng.uniform(0.3, 0.95, (b, k))),                   # pss
+            f32(rng.uniform(0.0, 0.4, (b, k))),                    # pd
+            f32(rng.uniform(0.3, 0.95, (b, k))),                   # pr
+            f32(rng.uniform(0.05, 0.7, (b, k))))                   # prn
+
+
+def composed(x, clicks, mask, pss, pd, pr, prn):
+    """The PR 1 path: odds scan -> conditional log-probs -> BCE -> mean."""
+    r = conditional_examination_odds(clicks, pss, pd, pr, prn)
+    e = jnp.exp(-jnp.abs(x))
+    log_p = jnp.minimum(x, 0.0) - jnp.log1p(r + e + r * e)
+    return masked_mean(log_bce(log_p, clicks), mask)
+
+
+def fused(impl):
+    return lambda *args: examination_nll(*args, impl=impl)
+
+
+def grad_of(fn):
+    # Differentiate wrt logits and the survival factor — the two arguments
+    # a chain model actually trains through.
+    return lambda *args: jax.value_and_grad(fn, argnums=(0, 3))(*args)
+
+
+def bench_examination(args_in, iters):
+    out = {}
+    for mode, wrap in (("value", lambda f: f), ("value_and_grad", grad_of)):
+        row = {}
+        ref_fn = jax.jit(wrap(fused("ref")))
+        got, want, t_ref, t_comp = timed_pair(ref_fn, jax.jit(wrap(composed)),
+                                              *args_in, iters=iters)
+        loss_got = got[0] if mode == "value_and_grad" else got
+        loss_want = want[0] if mode == "value_and_grad" else want
+        err = abs(float(loss_got) - float(loss_want))
+        assert err <= 1e-5, f"fused ref != composition ({err})"
+        row["compose_ms"] = t_comp * 1e3
+        row["ref_ms"] = t_ref * 1e3
+        xla_fn = jax.jit(wrap(fused("xla")))
+        _, _, t_xla, _ = timed_pair(xla_fn, ref_fn, *args_in, iters=iters)
+        row["xla_ms"] = t_xla * 1e3
+        row["speedup_xla_vs_compose"] = t_comp / t_xla
+        if mode == "value":
+            try:
+                pl_fn = jax.jit(wrap(fused("pallas")))
+                _, _, t_pl, _ = timed_pair(pl_fn, ref_fn, *args_in,
+                                           iters=max(iters // 4, 2), reps=2)
+                row["pallas_ms"] = t_pl * 1e3
+            except Exception as e:  # interpret mode may be unavailable
+                row["pallas_error"] = str(e)[:200]
+        out[mode] = row
+    return out
+
+
+def roofline(args_in):
+    """Static flops/bytes of the compiled fused-xla vs composed programs."""
+    out = {}
+    for label, fn in (("compose", composed), ("fused_xla", fused("xla"))):
+        hlo = jax.jit(fn).lower(*args_in).compile().as_text()
+        cost = analyze_hlo(hlo)
+        out[label] = {"flops": cost["flops"], "bytes": cost["bytes"]}
+    out["bytes_ratio_fused_over_compose"] = (
+        out["fused_xla"]["bytes"] / max(out["compose"]["bytes"], 1.0))
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=4096)
+    ap.add_argument("--positions", type=int, default=10)
+    ap.add_argument("--iters", type=int, default=20)
+    ap.add_argument("--check-roofline", action="store_true",
+                    help="fail if the fused xla path moves more bytes than "
+                         "the unfused composition")
+    ap.add_argument("--out", default=os.path.join(os.path.dirname(__file__),
+                                                  "BENCH_kernels.json"))
+    args = ap.parse_args()
+
+    inputs = make_inputs(args.batch, args.positions)
+    report = {"backend": jax.default_backend(),
+              "batch": args.batch, "positions": args.positions,
+              "examination_nll": bench_examination(inputs, args.iters),
+              "roofline": roofline(inputs)}
+
+    for mode, row in report["examination_nll"].items():
+        msg = "  ".join(f"{k} {v:8.3f}" for k, v in row.items()
+                        if k.endswith("_ms"))
+        print(f"examination_nll {mode:16s} {msg}  "
+              f"x{row['speedup_xla_vs_compose']:.2f} (xla vs compose)")
+    rl = report["roofline"]
+    print(f"roofline: compose {rl['compose']['bytes']:.3e} B  "
+          f"fused_xla {rl['fused_xla']['bytes']:.3e} B  "
+          f"ratio {rl['bytes_ratio_fused_over_compose']:.3f}")
+
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"wrote {args.out}")
+
+    if args.check_roofline and rl["bytes_ratio_fused_over_compose"] > 1.0:
+        print("ROOFLINE CHECK FAILED: fused path moves more bytes than the "
+              "composition", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -69,6 +69,22 @@ class _ChainModel(_PartsModel):
         return marginal_examination(
             self._marginal_log_cont(params, batch, g, gn)) + la
 
+    def compute_loss(self, params, batch):
+        # Chain-family fast path: hand the raw logits and probability-space
+        # factors to the fused examination_nll kernel (factors -> capped
+        # death-odds scan -> NLL in one pass, impl via the dispatch
+        # registry). Its custom VJP differentiates the ref composition, so
+        # gradients match predict_conditional_clicks -> log_bce exactly.
+        from repro.kernels import examination_nll
+
+        x = self._attr_logits(params, batch)
+        e, t, pos = sigmoid_core(x)
+        g = jnp.where(pos, t, e * t)
+        gn = jnp.where(pos, e * t, t)
+        clicks = batch["clicks"].astype(jnp.float32)
+        terms = self._conditional_terms(params, batch, g, gn)
+        return examination_nll(x, clicks, batch["mask"], *terms)
+
     def predict_conditional_clicks(self, params, batch):
         x = self._attr_logits(params, batch)
         # sigmoid_core exposes the shared exp so the fused output reuses it:

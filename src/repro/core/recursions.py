@@ -82,6 +82,12 @@ _ODDS_CAP = 1e9
 _ODDS_FLOOR = 1e-9
 _GROWTH_CAP = 1e28
 
+# Public aliases: the fused examination_nll lowerings (repro.kernels) must
+# saturate with exactly these bounds to stay conformant with this module.
+ODDS_CAP = _ODDS_CAP
+ODDS_FLOOR = _ODDS_FLOOR
+GROWTH_CAP = _GROWTH_CAP
+
 
 def _affine_scan_impl(a, b, signed_b=False):
     """Capped inclusive solve of z_k = a_k * z_{k-1} + b_k (z_{-1} = 0).

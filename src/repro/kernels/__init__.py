@@ -3,11 +3,18 @@
 Kernels: embedding_bag (CLAX tables / recsys bags / GNN aggregation),
 fm_interaction (DeepFM), dcn_cross (DCN-V2 towers, paper Listing 4),
 flash_attention (BST / AutoInt / LM archs), session_nll (fused CTR-family
-click loss). See ops.py for the public API and ref.py for the oracles.
+click loss), examination_nll (fused chain-family factors -> odds-scan -> NLL).
+
+Every kernel resolves its implementation ("pallas" | "ref" | "xla") through
+the dispatch registry at trace time — see ops.py for the public API,
+dispatch.py for the resolution order, and ref.py for the oracles.
 """
-from repro.kernels.ops import (embedding_bag, fm_interaction, dcn_cross,
-                               flash_attention, session_nll)
-from repro.kernels import ref
+from repro.kernels import dispatch, ref
+from repro.kernels.ops import (dcn_cross, embedding_bag, examination_nll,
+                               flash_attention, fm_interaction,
+                               override_impl, resolve_impl, session_nll,
+                               set_impl_override)
 
 __all__ = ["embedding_bag", "fm_interaction", "dcn_cross", "flash_attention",
-           "session_nll", "ref"]
+           "session_nll", "examination_nll", "override_impl", "resolve_impl",
+           "set_impl_override", "dispatch", "ref"]

@@ -1,0 +1,135 @@
+"""Single dispatch registry for every kernel in the package.
+
+Each kernel registers up to three implementations:
+
+  ``pallas``  the Pallas lowering — compiled on TPU, interpret-mode elsewhere
+              (a correctness tool, not a fast path off-TPU),
+  ``xla``     the best XLA-fusable jnp expression (the fast path on CPU/GPU),
+  ``ref``     the pure-jnp mathematical definition from :mod:`repro.kernels.ref`
+              (the conformance oracle — no performance tricks).
+
+Resolution happens **at trace time**, per call, in this order:
+
+  1. an explicit ``impl=`` argument at the call site,
+  2. a per-kernel programmatic override (:func:`override_impl` /
+     :func:`set_impl_override`),
+  3. a global programmatic override,
+  4. the ``CLAX_KERNEL_IMPL_<NAME>`` environment variable (per kernel),
+  5. the ``CLAX_KERNEL_IMPL`` environment variable (all kernels),
+  6. the backend default: ``pallas`` on TPU, ``xla`` everywhere else.
+
+Because resolution runs while JAX traces, an override only affects functions
+traced (or retraced) after it is set: already-compiled programs — e.g. the
+scan-jitted :class:`repro.train.engine.TrainEngine` chunk step — keep the impl
+they were traced with and are **not** retraced by flipping an override (pinned
+by tests/test_dispatch.py). That is the intended drill semantics: flip the
+env var, restart the job, every kernel re-resolves.
+"""
+from __future__ import annotations
+
+import os
+from contextlib import contextmanager
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+
+IMPLS = ("pallas", "ref", "xla")
+
+ENV_GLOBAL = "CLAX_KERNEL_IMPL"
+
+_REGISTRY: Dict[str, Dict[str, Callable]] = {}
+_OVERRIDES: Dict[str, str] = {}  # kernel name (or "*") -> impl
+
+_GLOBAL = "*"
+
+
+def _env_key(name: str) -> str:
+    return f"{ENV_GLOBAL}_{name.upper()}"
+
+
+def register(name: str, impl: str, fn: Callable) -> Callable:
+    """Register ``fn`` as the ``impl`` implementation of kernel ``name``."""
+    if impl not in IMPLS:
+        raise ValueError(f"impl must be one of {IMPLS}, got {impl!r}")
+    _REGISTRY.setdefault(name, {})[impl] = fn
+    return fn
+
+
+def registered_kernels() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def kernel_impls(name: str) -> Tuple[str, ...]:
+    """Implementations registered for ``name`` (registry order: pallas/ref/xla)."""
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown kernel {name!r}; registered: "
+                       f"{registered_kernels()}")
+    return tuple(i for i in IMPLS if i in _REGISTRY[name])
+
+
+def default_impl() -> str:
+    """Backend default: the compiled Pallas path on TPU, XLA elsewhere.
+
+    Off-TPU the Pallas kernels only run in interpret mode (per-grid-step
+    Python execution), so the fused jnp expression is the fast path there.
+    """
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def resolve_impl(name: str, impl: Optional[str] = None) -> str:
+    """Resolve the implementation for ``name`` (see module docstring order)."""
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown kernel {name!r}; registered: "
+                       f"{registered_kernels()}")
+    chosen = (impl
+              or _OVERRIDES.get(name)
+              or _OVERRIDES.get(_GLOBAL)
+              or os.environ.get(_env_key(name))
+              or os.environ.get(ENV_GLOBAL)
+              or default_impl())
+    if chosen not in _REGISTRY[name]:
+        raise ValueError(
+            f"kernel {name!r} has no impl {chosen!r}; available: "
+            f"{kernel_impls(name)}")
+    return chosen
+
+
+def dispatch(name: str, impl: Optional[str], *args, **kwargs):
+    """Resolve and call kernel ``name``; ``impl=None`` follows the chain."""
+    return _REGISTRY[name][resolve_impl(name, impl)](*args, **kwargs)
+
+
+def get_impl(name: str, impl: Optional[str] = None) -> Callable:
+    """The callable that :func:`dispatch` would invoke right now."""
+    return _REGISTRY[name][resolve_impl(name, impl)]
+
+
+def set_impl_override(impl: Optional[str], kernel: Optional[str] = None) -> None:
+    """Force ``impl`` for one kernel (or all, ``kernel=None``); ``None`` clears.
+
+    Process-wide and trace-time only — see the module docstring for what that
+    means for already-compiled programs. Prefer :func:`override_impl` in tests.
+    """
+    key = kernel or _GLOBAL
+    if impl is None:
+        _OVERRIDES.pop(key, None)
+    else:
+        if impl not in IMPLS:
+            raise ValueError(f"impl must be one of {IMPLS}, got {impl!r}")
+        _OVERRIDES[key] = impl
+
+
+@contextmanager
+def override_impl(impl: Optional[str] = None, **per_kernel: str):
+    """Scoped impl override: ``override_impl("ref")`` forces every kernel,
+    ``override_impl(session_nll="ref")`` just one. Restores prior state."""
+    saved = dict(_OVERRIDES)
+    try:
+        if impl is not None:
+            set_impl_override(impl)
+        for name, i in per_kernel.items():
+            set_impl_override(i, kernel=name)
+        yield
+    finally:
+        _OVERRIDES.clear()
+        _OVERRIDES.update(saved)

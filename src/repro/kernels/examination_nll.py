@@ -1,0 +1,146 @@
+"""Fused examination-chain NLL Pallas kernel (DCM / CCM / DBN / SDBN loss).
+
+One pass from per-position probability factors to the scalar loss:
+
+    factors -> capped affine death-odds scan -> conditional log-probs -> NLL
+
+The unfused path (PR 1) materializes the (B, K) odds, the (B, K) conditional
+log-probabilities, and the (B, K) per-element BCE before the masked mean —
+three HBM round-trips of the batch. Here the whole chain runs inside one VMEM
+tile: the affine recurrence z_k = a_k z_{k-1} + b_k is solved in-register with
+a Hillis-Steele doubling scan along the lane axis (ceil(log2 K) capped
+multiply-add rounds), and only a (G, 1) partial sum / count pair per grid
+block ever leaves the kernel.
+
+Numerics follow :mod:`repro.core.recursions` exactly: the same ODDS_FLOOR on
+denominators, the same ODDS_CAP saturation on the odds (finite log-probability
+with zero gradient for dead chains, never inf/NaN), and the same GROWTH_CAP on
+composite growth products so the capped combine stays order-insensitive for
+every un-saturated span. The NLL uses the two-log fused form
+
+    log P(C=1)  = min(x, 0) - log1p(r + e + r e)              e = exp(-|x|)
+    log P(C=0)  = log(s + r (1 + e)) - log1p(r + e + r e)     s = e if x>=0 else 1
+
+(the complement computed directly from the same denominator instead of
+log1mexp of the first line — one extra log, no cancellation, no (B, K)
+log-prob intermediate).
+
+Gradients never flow through this lowering: the public
+:func:`repro.kernels.ops.examination_nll` wraps every impl in a custom VJP
+whose backward pass is ``jax.vjp`` of the ref composition, so all impls share
+the saturating gradient semantics of ``core/recursions`` bit-for-bit.
+
+``examination_nll_xla`` is the fused jnp counterpart (same two-log form, odds
+via the associative scan) — the fast path on CPU/GPU where Pallas only
+interprets.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+
+
+def _examination_nll_kernel(floor, cap, growth_cap,
+                            x_ref, c_ref, m_ref, ss_ref, pd_ref, pr_ref,
+                            prn_ref, sum_ref, cnt_ref):
+    f32 = jnp.float32
+    x = x_ref[...].astype(f32)        # (bb, Kp) attraction logits
+    c = c_ref[...].astype(f32)        # clicks
+    m = m_ref[...].astype(f32)        # mask weights
+    pss = ss_ref[...].astype(f32)     # p_skip_survive
+    pd = pd_ref[...].astype(f32)      # p_death
+    pr = pr_ref[...].astype(f32)      # p_reset
+    prn = prn_ref[...].astype(f32)    # p_reset_not
+
+    clicked = (c > 0).astype(f32)
+    keep = 1.0 - clicked
+    a = keep / jnp.maximum(pss, floor)
+    b = jnp.minimum(a * pd + clicked * (prn / jnp.maximum(pr, floor)), cap)
+
+    # Hillis-Steele inclusive scan of z_k = a_k z_{k-1} + b_k along lanes.
+    # Each round folds the prefix `off` positions back: identity fill
+    # (a=1, b=0) below the offset. b must update before a (the combine uses
+    # the pre-round a as the right factor). Caps mirror _affine_scan_impl.
+    kp = x.shape[1]
+    lane = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+    off = 1
+    while off < kp:
+        a_sh = jnp.where(lane >= off, jnp.roll(a, off, axis=1), 1.0)
+        b_sh = jnp.where(lane >= off, jnp.roll(b, off, axis=1), 0.0)
+        b = jnp.minimum(a * b_sh + b, cap)
+        a = jnp.minimum(a * a_sh, growth_cap)
+        off *= 2
+
+    # r_k = z_{k-1} (virtual sure-reset start: r_0 = 0).
+    r = jnp.where(lane >= 1, jnp.roll(b, 1, axis=1), 0.0)
+
+    e = jnp.exp(-jnp.abs(x))
+    denom = jnp.log1p(r + e + r * e)
+    log_p = jnp.minimum(x, 0.0) - denom
+    s = jnp.where(x >= 0, e, 1.0)
+    log_1mp = jnp.log(s + r * (1.0 + e)) - denom
+    nll = -(c * log_p + (1.0 - c) * log_1mp)
+    sum_ref[...] = jnp.sum(nll * m, keepdims=True).reshape(1, 1)
+    cnt_ref[...] = jnp.sum(m, keepdims=True).reshape(1, 1)
+
+
+def examination_nll_pallas(attr_logits: jax.Array, clicks: jax.Array,
+                           mask: jax.Array, p_skip_survive: jax.Array,
+                           p_death: jax.Array, p_reset: jax.Array,
+                           p_reset_not: jax.Array, *, block_b: int = 256,
+                           interpret: bool = False) -> jax.Array:
+    """All inputs (B, K) -> scalar fp32 masked-mean conditional click NLL."""
+    from repro.core.recursions import GROWTH_CAP, ODDS_CAP, ODDS_FLOOR
+
+    B, K = attr_logits.shape
+    k_pad = (-K) % LANE
+    b_pad = (-B) % block_b
+    m = mask.astype(jnp.float32)
+    inputs = [attr_logits.astype(jnp.float32), clicks.astype(jnp.float32), m,
+              p_skip_survive.astype(jnp.float32), p_death.astype(jnp.float32),
+              p_reset.astype(jnp.float32), p_reset_not.astype(jnp.float32)]
+    if k_pad or b_pad:
+        # Identity padding: no click, unit survive, sure reset, zero weight —
+        # padded positions are scan no-ops and drop out of the masked sum.
+        fills = (0.0, 0.0, 0.0, 1.0, 0.0, 1.0, 0.0)
+        inputs = [jnp.pad(arr, ((0, b_pad), (0, k_pad)), constant_values=f)
+                  for arr, f in zip(inputs, fills)]
+    grid = (inputs[0].shape[0] // block_b,)
+    kernel = functools.partial(_examination_nll_kernel,
+                               ODDS_FLOOR, ODDS_CAP, GROWTH_CAP)
+    sums, counts = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_b, inputs[0].shape[1]),
+                               lambda i: (i, 0))] * 7,
+        out_specs=[pl.BlockSpec((1, 1), lambda i: (i, 0))] * 2,
+        out_shape=[jax.ShapeDtypeStruct((grid[0], 1), jnp.float32)] * 2,
+        interpret=interpret,
+    )(*inputs)
+    return jnp.sum(sums) / jnp.maximum(jnp.sum(counts), 1.0)
+
+
+def examination_nll_xla(attr_logits: jax.Array, clicks: jax.Array,
+                        mask: jax.Array, p_skip_survive: jax.Array,
+                        p_death: jax.Array, p_reset: jax.Array,
+                        p_reset_not: jax.Array) -> jax.Array:
+    """Fused jnp form: associative-scan odds + the kernel's two-log NLL."""
+    from repro.core.recursions import conditional_examination_odds
+
+    x = attr_logits.astype(jnp.float32)
+    c = clicks.astype(jnp.float32)
+    m = mask.astype(jnp.float32)
+    r = conditional_examination_odds(c, p_skip_survive, p_death, p_reset,
+                                     p_reset_not)
+    e = jnp.exp(-jnp.abs(x))
+    denom = jnp.log1p(r + e + r * e)
+    log_p = jnp.minimum(x, 0.0) - denom
+    s = jnp.where(x >= 0, e, 1.0)
+    log_1mp = jnp.log(s + r * (1.0 + e)) - denom
+    nll = -(c * log_p + (1.0 - c) * log_1mp)
+    return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)

@@ -1,12 +1,25 @@
-"""Public jit'd kernel API with implementation dispatch.
+"""Public jit'd kernel API on top of the dispatch registry.
 
-``impl``: "pallas" (compiled TPU path; interpret-mode on CPU), "ref" (pure
-jnp oracle). Default is backend-aware: the ref path on CPU (interpret mode is
-a correctness tool, not a fast path) and the Pallas kernel on TPU.
+Every kernel registers three implementations with
+:mod:`repro.kernels.dispatch`:
 
-embedding_bag carries a custom VJP so the fused kernel is trainable: the
-backward scatter (d_table) is a segment-sum over SMEM-resident ids — the same
-memory pattern as the forward gather, no (B*L, D) intermediate.
+  ============  ==========================================================
+  ``pallas``    the Pallas lowering (compiled on TPU, interpret-mode
+                elsewhere — a conformance tool off-TPU, not a fast path)
+  ``xla``       the best XLA-fusable jnp expression (CPU/GPU fast path)
+  ``ref``       the pure-jnp oracle from :mod:`repro.kernels.ref`
+  ============  ==========================================================
+
+``impl=None`` resolves per backend at trace time (pallas on TPU, xla
+elsewhere), overridable programmatically (``override_impl``) or via the
+``CLAX_KERNEL_IMPL[_<NAME>]`` environment variables for drills. Passing an
+explicit ``impl`` always wins.
+
+Gradient semantics are impl-independent: ``embedding_bag``, ``session_nll``
+and ``examination_nll`` carry custom VJPs, so every impl trains with the same
+backward pass — a segment scatter that never materializes a (B*L, D)
+intermediate, the closed-form sigmoid delta, and ``jax.vjp`` of the ref
+examination composition (inheriting ``core/recursions``' saturating VJP).
 """
 from __future__ import annotations
 
@@ -16,20 +29,112 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import dispatch as _dispatch
 from repro.kernels import ref as _ref
 from repro.kernels.dcn_cross import dcn_cross_pallas
 from repro.kernels.embedding_bag import embedding_bag_pallas
+from repro.kernels.examination_nll import (examination_nll_pallas,
+                                           examination_nll_xla)
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.fm_interaction import fm_interaction_pallas
 from repro.kernels.session_nll import session_nll_pallas
 
-
-def _default_impl() -> str:
-    return "pallas" if jax.default_backend() == "tpu" else "ref"
+# Re-exported so callers can flip impls without importing the registry module.
+override_impl = _dispatch.override_impl
+set_impl_override = _dispatch.set_impl_override
+resolve_impl = _dispatch.resolve_impl
 
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# XLA implementations (fused jnp forms; oracles live in ref.py)
+# ---------------------------------------------------------------------------
+
+def _embedding_bag_xla(table, ids, weights):
+    safe = jnp.maximum(ids, 0)
+    w = jnp.where(ids >= 0, weights, 0.0).astype(jnp.float32)
+    gathered = jnp.take(table, safe, axis=0).astype(jnp.float32)  # (B, L, D)
+    return jnp.sum(gathered * w[..., None], axis=1)
+
+
+def _session_nll_xla(logits, clicks, mask):
+    x = logits.astype(jnp.float32)
+    c = clicks.astype(jnp.float32)
+    m = mask.astype(jnp.float32)
+    # softplus(x) - c*x: the single-transcendental form of the BCE chain.
+    nll = jnp.maximum(x, 0.0) + jnp.log1p(jnp.exp(-jnp.abs(x))) - c * x
+    return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+
+
+def _fm_interaction_xla(v):
+    vf = v.astype(jnp.float32)
+    s = jnp.sum(vf, axis=1)
+    # Subtract per-d before the lane reduction (as the ref does): the two
+    # totals are large and nearly equal, so subtracting them last loses
+    # most of the result's relative precision to cancellation.
+    return 0.5 * jnp.sum(jnp.square(s) - jnp.sum(jnp.square(vf), axis=1),
+                         axis=-1)
+
+
+def _flash_attention_xla(q, k, v, causal=False, scale=None):
+    """Grouped softmax attention: GQA via a reshape, never a repeated K/V."""
+    B, Hq, Sq, Dh = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    group = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / (Dh ** 0.5)
+    qg = q.reshape(B, Hkv, group, Sq, Dh).astype(jnp.float32)
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", qg,
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((Sq, Skv), bool), k=Skv - Sq)
+        logits = jnp.where(mask, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", probs, v.astype(jnp.float32))
+    return out.reshape(B, Hq, Sq, Dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_dispatch.register("embedding_bag", "pallas",
+                   lambda t, i, w: embedding_bag_pallas(
+                       t, i, w, interpret=_interpret()))
+_dispatch.register("embedding_bag", "ref", _ref.embedding_bag_ref)
+_dispatch.register("embedding_bag", "xla", _embedding_bag_xla)
+
+_dispatch.register("session_nll", "pallas",
+                   lambda x, c, m: session_nll_pallas(
+                       x, c, m, interpret=_interpret()))
+_dispatch.register("session_nll", "ref", _ref.session_nll_ref)
+_dispatch.register("session_nll", "xla", _session_nll_xla)
+
+_dispatch.register("fm_interaction", "pallas",
+                   lambda v: fm_interaction_pallas(v, interpret=_interpret()))
+_dispatch.register("fm_interaction", "ref", _ref.fm_interaction_ref)
+_dispatch.register("fm_interaction", "xla", _fm_interaction_xla)
+
+_dispatch.register("dcn_cross", "pallas",
+                   lambda x0, x, w, b: dcn_cross_pallas(
+                       x0, x, w, b, interpret=_interpret()))
+_dispatch.register("dcn_cross", "ref", _ref.dcn_cross_ref)
+# The ref expression (one GEMM + elementwise) is already the optimal XLA form.
+_dispatch.register("dcn_cross", "xla", _ref.dcn_cross_ref)
+
+_dispatch.register("flash_attention", "pallas",
+                   lambda q, k, v, **kw: flash_attention_pallas(
+                       q, k, v, interpret=_interpret(), **kw))
+_dispatch.register("flash_attention", "ref", _ref.flash_attention_ref)
+_dispatch.register("flash_attention", "xla", _flash_attention_xla)
+
+_dispatch.register("examination_nll", "pallas",
+                   lambda *a: examination_nll_pallas(
+                       *a, interpret=_interpret()))
+_dispatch.register("examination_nll", "ref", _ref.examination_nll_ref)
+_dispatch.register("examination_nll", "xla", examination_nll_xla)
 
 
 # ---------------------------------------------------------------------------
@@ -38,9 +143,7 @@ def _interpret() -> bool:
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
 def _embedding_bag(table, ids, weights, impl):
-    if impl == "pallas":
-        return embedding_bag_pallas(table, ids, weights, interpret=_interpret())
-    return _ref.embedding_bag_ref(table, ids, weights)
+    return _dispatch.dispatch("embedding_bag", impl, table, ids, weights)
 
 
 def _bag_fwd(table, ids, weights, impl):
@@ -49,19 +152,26 @@ def _bag_fwd(table, ids, weights, impl):
 
 def _bag_bwd(impl, res, g):
     table, ids, weights = res
-    B, L = ids.shape
     N, D = table.shape
     g = g.astype(jnp.float32)  # (B, D)
     w = jnp.where(ids >= 0, weights, 0.0).astype(jnp.float32)
-    safe = jnp.maximum(ids, 0).reshape(-1)
-    # d_table[r] = sum_{(b,l): ids=r} w[b,l] * g[b]
-    contrib = (w[..., None] * g[:, None, :]).reshape(B * L, D)
-    d_table = jax.ops.segment_sum(contrib, safe, num_segments=N)
+    safe = jnp.maximum(ids, 0)
+
+    # d_table[r] = sum_{(b,l): ids=r} w[b,l] * g[b], scattered one bag slot
+    # at a time: the carry is the (N, D) output itself (donated through the
+    # scan) and each step touches only a (B, D) slice — peak footprint
+    # O(N*D + B*D), vs the former (B*L, D) contrib + segment_sum. d_w rides
+    # the same scan: d_w[b,l] = <table[ids[b,l]], g[b]> from a (B, D) gather.
+    def step(d_table, xs):
+        ids_l, w_l = xs  # (B,), (B,)
+        rows = jnp.take(table, ids_l, axis=0).astype(jnp.float32)
+        d_w_l = jnp.sum(rows * g, axis=-1)
+        return d_table.at[ids_l].add(w_l[:, None] * g), d_w_l
+
+    d_table, d_w_cols = jax.lax.scan(
+        step, jnp.zeros((N, D), jnp.float32), (safe.T, w.T))
     d_table = d_table.astype(table.dtype)
-    # d_w[b,l] = <table[ids[b,l]], g[b]>
-    rows = jnp.take(table, safe.reshape(B, L), axis=0).astype(jnp.float32)
-    d_w = jnp.einsum("bld,bd->bl", rows, g)
-    d_w = jnp.where(ids >= 0, d_w, 0.0).astype(weights.dtype)
+    d_w = jnp.where(ids >= 0, d_w_cols.T, 0.0).astype(weights.dtype)
     return d_table, None, d_w
 
 
@@ -75,7 +185,7 @@ def embedding_bag(table: jax.Array, ids: jax.Array,
 
     combiner: "sum" | "mean" (mean over non-padding entries).
     """
-    impl = impl or _default_impl()
+    impl = _dispatch.resolve_impl("embedding_bag", impl)
     if weights is None:
         weights = jnp.ones(ids.shape, jnp.float32)
     if combiner == "mean":
@@ -92,9 +202,7 @@ def embedding_bag(table: jax.Array, ids: jax.Array,
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
 def _session_nll(logits, clicks, mask, impl):
-    if impl == "pallas":
-        return session_nll_pallas(logits, clicks, mask, interpret=_interpret())
-    return _ref.session_nll_ref(logits, clicks, mask)
+    return _dispatch.dispatch("session_nll", impl, logits, clicks, mask)
 
 
 def _nll_fwd(logits, clicks, mask, impl):
@@ -124,8 +232,59 @@ def session_nll(logits: jax.Array, clicks: jax.Array, mask: jax.Array,
     (B, K) tile; the scalar loss (and its closed-form VJP) never materializes
     the per-element log-probability intermediates.
     """
-    impl = impl or _default_impl()
+    impl = _dispatch.resolve_impl("session_nll", impl)
     return _session_nll(logits, clicks, mask, impl)
+
+
+# ---------------------------------------------------------------------------
+# examination_nll with custom VJP (backward = jax.vjp of the ref composition)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(7,))
+def _examination_nll(x, clicks, mask, pss, pd, pr, prn, impl):
+    return _dispatch.dispatch("examination_nll", impl,
+                              x, clicks, mask, pss, pd, pr, prn)
+
+
+def _exam_fwd(x, clicks, mask, pss, pd, pr, prn, impl):
+    out = _examination_nll(x, clicks, mask, pss, pd, pr, prn, impl)
+    return out, (x, clicks, mask, pss, pd, pr, prn)
+
+
+def _exam_bwd(impl, res, g):
+    x, clicks, mask, pss, pd, pr, prn = res
+
+    # Differentiate the ref composition regardless of the forward impl: every
+    # impl then shares the exact pre-dispatch gradient, including the
+    # saturating zero-cotangent semantics of core/recursions' _affine_scan.
+    def composed(x_, c_, ss_, d_, r_, rn_):
+        return _ref.examination_nll_ref(x_, c_, mask, ss_, d_, r_, rn_)
+
+    _, vjp = jax.vjp(composed, x, clicks, pss, pd, pr, prn)
+    dx, dc, dss, dd, dr, drn = vjp(g)
+    return dx, dc, None, dss, dd, dr, drn
+
+
+_examination_nll.defvjp(_exam_fwd, _exam_bwd)
+
+
+def examination_nll(attr_logits: jax.Array, clicks: jax.Array,
+                    mask: jax.Array, p_skip_survive: jax.Array,
+                    p_death: jax.Array, p_reset: jax.Array,
+                    p_reset_not: jax.Array,
+                    impl: Optional[str] = None) -> jax.Array:
+    """Fused conditional click NLL of the examination-chain models.
+
+    Inputs are the raw attraction logits plus the four probability-space
+    factors of ``core.recursions.conditional_examination_odds`` (all (B, K));
+    the output is the scalar masked-mean NLL that
+    ``_ChainModel.compute_loss`` minimizes. The factor -> odds-scan -> NLL
+    chain runs in one pass with no (B, K) log-probability intermediates; see
+    kernels/examination_nll.py for the lowering and the numerics contract.
+    """
+    impl = _dispatch.resolve_impl("examination_nll", impl)
+    return _examination_nll(attr_logits, clicks, mask, p_skip_survive,
+                            p_death, p_reset, p_reset_not, impl)
 
 
 # ---------------------------------------------------------------------------
@@ -133,25 +292,20 @@ def session_nll(logits: jax.Array, clicks: jax.Array, mask: jax.Array,
 # ---------------------------------------------------------------------------
 
 def fm_interaction(v: jax.Array, impl: Optional[str] = None) -> jax.Array:
-    impl = impl or _default_impl()
-    if impl == "pallas":
-        return fm_interaction_pallas(v, interpret=_interpret())
-    return _ref.fm_interaction_ref(v)
+    return _dispatch.dispatch("fm_interaction", impl, v)
 
 
 def dcn_cross(x0: jax.Array, x: jax.Array, w: jax.Array, b: jax.Array,
               impl: Optional[str] = None) -> jax.Array:
-    impl = impl or _default_impl()
-    if impl == "pallas":
-        return dcn_cross_pallas(x0, x, w, b, interpret=_interpret())
-    return _ref.dcn_cross_ref(x0, x, w, b)
+    return _dispatch.dispatch("dcn_cross", impl, x0, x, w, b)
 
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                     causal: bool = False, scale: Optional[float] = None,
                     impl: Optional[str] = None, **block_kwargs) -> jax.Array:
-    impl = impl or _default_impl()
+    impl = _dispatch.resolve_impl("flash_attention", impl)
     if impl == "pallas":
-        return flash_attention_pallas(q, k, v, causal=causal, scale=scale,
-                                      interpret=_interpret(), **block_kwargs)
-    return _ref.flash_attention_ref(q, k, v, causal=causal, scale=scale)
+        return _dispatch.dispatch("flash_attention", impl, q, k, v,
+                                  causal=causal, scale=scale, **block_kwargs)
+    return _dispatch.dispatch("flash_attention", impl, q, k, v,
+                              causal=causal, scale=scale)

@@ -86,6 +86,39 @@ def session_nll_ref(logits: jax.Array, clicks: jax.Array, mask: jax.Array
     return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
 
 
+def examination_nll_ref(attr_logits: jax.Array, clicks: jax.Array,
+                        mask: jax.Array, p_skip_survive: jax.Array,
+                        p_death: jax.Array, p_reset: jax.Array,
+                        p_reset_not: jax.Array) -> jax.Array:
+    """Masked-mean conditional click NLL of the examination-chain models,
+    written as the literal PR 1 composition the fused kernel replaces:
+
+        r     = conditional_examination_odds(clicks, ...)   (capped scan)
+        log_p = min(x, 0) - log1p(r + e + r*e)              (e = exp(-|x|))
+        nll   = log_bce(log_p, clicks);  loss = masked mean
+
+    This is bit-identical to ``_ChainModel.predict_conditional_clicks`` +
+    ``ClickModel.compute_loss`` pre-dispatch, which makes it both the
+    conformance oracle and the VJP the public ``examination_nll`` custom
+    gradient differentiates through (inheriting the saturating custom VJP of
+    ``_affine_scan``). Returns a fp32 scalar.
+    """
+    # Deferred: repro.core lazily imports repro.kernels in compute_loss, so a
+    # module-level import here would complete the cycle at import time.
+    from repro.core.recursions import conditional_examination_odds
+    from repro.stable import log_bce
+
+    x = attr_logits.astype(jnp.float32)
+    c = clicks.astype(jnp.float32)
+    m = mask.astype(jnp.float32)
+    e = jnp.exp(-jnp.abs(x))
+    r = conditional_examination_odds(c, p_skip_survive, p_death, p_reset,
+                                     p_reset_not)
+    log_p = jnp.minimum(x, 0.0) - jnp.log1p(r + e + r * e)
+    nll = log_bce(log_p, c)
+    return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+
+
 def segment_mean_ref(values: jax.Array, segment_ids: jax.Array,
                      num_segments: int) -> jax.Array:
     """Mean-aggregation by segment (the GraphSAGE aggregator oracle)."""

@@ -184,6 +184,12 @@ def main():
                     choices=["TERM", "KILL"],
                     help="signal --fault-kill-at-step sends (TERM exercises "
                          "graceful preemption, KILL an instant crash)")
+    ap.add_argument("--kernel-impl", default=None,
+                    choices=["pallas", "ref", "xla"],
+                    help="force every repro.kernels op onto one "
+                         "implementation (default: backend-resolved — "
+                         "pallas on TPU, xla elsewhere); equivalent to "
+                         "CLAX_KERNEL_IMPL but set before the engine traces")
     args = ap.parse_args()
     if args.max_restarts:
         if not args.ckpt_dir:
@@ -223,6 +229,13 @@ def main():
         ap.error("--replica-lrs is not supported with --sparse-tables (the "
                  "lazy-AdamW lr is a static hyperparameter shared by all "
                  "replicas); per-seed sweeps (--replica-seeds) are fine")
+
+    if args.kernel_impl:
+        # Before anything traces: the dispatch registry resolves at trace
+        # time, so the override must exist before the engine compiles.
+        from repro.kernels import set_impl_override
+
+        set_impl_override(args.kernel_impl)
 
     mesh = None
     if args.data_parallel:

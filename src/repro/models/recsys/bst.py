@@ -12,7 +12,9 @@ from jax.sharding import PartitionSpec as P
 
 from repro import optim as optim_lib
 from repro.kernels import flash_attention
-from repro.models.recsys.embedding import TableConfig, init_table, table_lookup, table_spec
+from repro.models.recsys.embedding import (TableConfig, bag_lookup,
+                                           init_table, table_lookup,
+                                           table_spec)
 from repro.nn import MLP
 from repro.stable import log_bce, log_sigmoid
 
@@ -134,8 +136,11 @@ class BST:
         a single batched matmul (the standard serving approximation for
         sequence rankers at retrieval stage)."""
         cfg = self.cfg
-        hist = table_lookup(cfg.table, params["embedding"], batch["history_ids"])
-        user_vec = jnp.mean(hist + params["pos_embed"][None, :cfg.seq_len], axis=1)
+        # Mean-pool the history through the fused bag kernel; the (static)
+        # positional mean separates out of the linear pooling.
+        user_vec = (bag_lookup(cfg.table, params["embedding"],
+                               batch["history_ids"], combiner="mean")
+                    + jnp.mean(params["pos_embed"][:cfg.seq_len], axis=0))
         cand = table_lookup(cfg.table, params["embedding"],
                             batch["candidate_ids"])  # (C, D)
         return jnp.einsum("bd,cd->bc", user_vec, cand)

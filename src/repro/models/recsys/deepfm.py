@@ -15,7 +15,9 @@ from jax.sharding import PartitionSpec as P
 
 from repro import optim as optim_lib
 from repro.kernels import fm_interaction
-from repro.models.recsys.embedding import TableConfig, init_table, table_lookup, table_spec
+from repro.models.recsys.embedding import (TableConfig, bag_lookup,
+                                           init_table, table_lookup,
+                                           table_spec)
 from repro.nn import MLP
 from repro.stable import log_bce, log_sigmoid
 
@@ -70,12 +72,14 @@ class DeepFM:
         """batch["field_ids"]: (B, n_sparse) global ids -> logits (B,)."""
         ids = batch["field_ids"]
         v = table_lookup(self.cfg.table, params["embedding"], ids)  # (B, F, D)
-        first = table_lookup(self.cfg.first_order_table,
-                             params["first_order"], ids)[..., 0]    # (B, F)
+        # First-order term as one fused bag reduction over the (N, 1) table:
+        # sum_f w[ids_f] without a (B, F, 1) gather intermediate.
+        first = bag_lookup(self.cfg.first_order_table,
+                           params["first_order"], ids)[..., 0]      # (B,)
         fm = fm_interaction(v)                                      # (B,)
         flat = v.reshape(v.shape[0], -1)
         deep = self.mlp(params["mlp"], flat)[..., 0]                # (B,)
-        return params["bias"] + jnp.sum(first, axis=-1) + fm + deep
+        return params["bias"] + first + fm + deep
 
     def loss(self, params, batch) -> jax.Array:
         log_p = log_sigmoid(self.forward(params, batch))

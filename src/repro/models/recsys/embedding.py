@@ -66,6 +66,33 @@ def table_lookup(cfg: TableConfig, params: Dict, ids: jax.Array) -> jax.Array:
     return jnp.take(params["table"], jnp.clip(ids, 0, cfg.stored_rows - 1), axis=0)
 
 
+def bag_lookup(cfg: TableConfig, params: Dict, ids: jax.Array,
+               weights: jax.Array = None, combiner: str = "sum") -> jax.Array:
+    """Fused bag reduction: out[b] = reduce_l w[b,l] * table[ids[b,l]].
+
+    Routes through the embedding_bag kernel (gather + weighted reduce in one
+    pass, ids < 0 = padding, impl via the dispatch registry). QR-compressed
+    tables have no materialized row table to gather from, so they fall back
+    to lookup + reduce.
+    """
+    from repro.kernels import embedding_bag
+
+    if cfg.compression == "qr":
+        rows = table_lookup(cfg, params, jnp.maximum(ids, 0))
+        w = jnp.ones(ids.shape, jnp.float32) if weights is None else weights
+        w = jnp.where(ids >= 0, w, 0.0).astype(jnp.float32)
+        if combiner == "mean":
+            count = jnp.sum((ids >= 0).astype(jnp.float32), axis=1,
+                            keepdims=True)
+            w = w / jnp.maximum(count, 1.0)
+        return jnp.einsum("bld,bl->bd", rows.astype(jnp.float32), w)
+    if cfg.compression == "hash":
+        ids = jnp.where(ids >= 0, hash_ids(ids, cfg.stored_rows), -1)
+    else:
+        ids = jnp.where(ids >= 0, jnp.clip(ids, 0, cfg.stored_rows - 1), -1)
+    return embedding_bag(params["table"], ids, weights, combiner=combiner)
+
+
 def table_spec(cfg: TableConfig) -> Dict:
     """Row-sharded over 'model' (both QR components too)."""
     if cfg.compression == "qr":

@@ -1,5 +1,9 @@
-"""Chaos-testing utilities: deterministic fault injection for the data
-plane, the train step, and the process itself."""
+"""Test-support machinery: deterministic chaos/fault injection for the data
+plane, the train step, and the process itself, plus the differential kernel
+conformance harness (repro.testing.conformance)."""
+from repro.testing.conformance import (KERNEL_SPECS, SPECS_BY_NAME,
+                                       KernelSpec, check_extreme, check_grads,
+                                       check_value, run_conformance)
 from repro.testing.faults import (FlakyShardReads, KillSwitch,
                                   NonFiniteBatchInjector, corrupt_shard_file,
                                   truncate_tail)
@@ -10,4 +14,11 @@ __all__ = [
     "NonFiniteBatchInjector",
     "FlakyShardReads",
     "KillSwitch",
+    "KernelSpec",
+    "KERNEL_SPECS",
+    "SPECS_BY_NAME",
+    "check_value",
+    "check_grads",
+    "check_extreme",
+    "run_conformance",
 ]

@@ -1,0 +1,339 @@
+"""Differential conformance harness for the kernel dispatch registry.
+
+Every kernel in :mod:`repro.kernels` must agree with its pure-jnp ref oracle
+— on values, on gradients, and on NaN-freedom over the adversarial corpus —
+for every registered implementation, dtype, and padding-edge shape. This
+module is the machinery; tests/test_kernel_conformance.py is the sweep.
+
+Three checks per (kernel, impl, dtype, shape) cell:
+
+  * :func:`check_value` — forward parity against the ref oracle within the
+    dtype's tolerance (1e-5 for float32, per the acceptance contract).
+  * :func:`check_grads` — gradient parity: the output is scalarized by a
+    fixed random projection and ``jax.grad`` through the impl is compared
+    against ``jax.grad`` through the ref oracle. Kernels wrapped in a custom
+    VJP (embedding_bag, session_nll, examination_nll) share one backward
+    pass by construction, so all impls check; for the rest the Pallas
+    lowering has no VJP rule (``grad_impls`` excludes it — the forward-only
+    caveat is documented in the README).
+  * :func:`check_extreme` — value and gradient finiteness on the
+    extreme-logit / fully-masked corpus of tests/test_recursions.py
+    (|logit| = 36 saturates every sigmoid and drives the death-odds
+    recurrence into its cap; empty masks exercise the max(count, 1) guards).
+
+Shapes are chosen to sit below, at, and straddling the 128-lane width and
+each kernel's batch block size, so padding and block-boundary handling are
+part of the contract, not an accident of the default shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import kernels
+
+IMPLS = ("pallas", "ref", "xla")
+
+#: (rtol, atol) per input dtype. float32 pins the 1e-5 contract; bfloat16
+#: inputs round to ~3 decimal digits before the fp32 accumulation, so parity
+#: is only meaningful to ~1e-2.
+TOLS: Dict[str, Tuple[float, float]] = {
+    "float32": (1e-5, 1e-5),
+    "bfloat16": (2e-2, 2e-2),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    """One kernel's conformance contract."""
+    name: str
+    #: (args, impl) -> output; args come from make_inputs.
+    call: Callable[[tuple, Optional[str]], jax.Array]
+    #: (np rng, shape tuple, jnp dtype) -> args tuple.
+    make_inputs: Callable[[np.random.Generator, tuple, object], tuple]
+    #: Padding-edge shapes: below / at / straddling lane & block boundaries.
+    shapes: Tuple[tuple, ...]
+    #: Positions in args that are differentiable inputs.
+    diff_argnums: Tuple[int, ...]
+    #: Impls whose gradient is checked (pallas only when a custom VJP exists).
+    grad_impls: Tuple[str, ...]
+    #: () -> sequence of args tuples for the NaN/saturation corpus.
+    extreme_cases: Optional[Callable[[], Sequence[tuple]]] = None
+    #: Args whose extreme-corpus gradients must also stay under the
+    #: magnitude bound (finiteness is checked for all diff args). None =
+    #: all diff args. Probability-space factor inputs are exempt: their
+    #: gradients legitimately reach ~1/ODDS_FLOOR at saturation; the
+    #: boundedness contract of test_recursions.py is a logit-space property.
+    extreme_bounded_argnums: Optional[Tuple[int, ...]] = None
+
+
+# ---------------------------------------------------------------------------
+# input builders
+# ---------------------------------------------------------------------------
+
+def _bag_inputs(rng, shape, dtype):
+    B, L, N, D = shape
+    table = jnp.asarray(rng.normal(size=(N, D)), dtype)
+    # ids include explicit -1 padding slots.
+    ids = jnp.asarray(rng.integers(-1, N, (B, L)), jnp.int32)
+    weights = jnp.asarray(rng.uniform(0.2, 1.0, (B, L)), jnp.float32)
+    return table, ids, weights
+
+
+def _session_inputs(rng, shape, dtype):
+    B, K = shape
+    logits = jnp.asarray(rng.normal(size=(B, K)) * 4.0, dtype)
+    clicks = jnp.asarray(rng.integers(0, 2, (B, K)), jnp.float32)
+    mask = jnp.asarray(rng.random((B, K)) < 0.8)
+    return logits, clicks, mask
+
+
+def _examination_inputs(rng, shape, dtype):
+    B, K = shape
+    logits = jnp.asarray(rng.normal(size=(B, K)) * 4.0, dtype)
+    clicks = jnp.asarray(rng.integers(0, 2, (B, K)), jnp.float32)
+    mask = jnp.asarray(np.arange(K)[None, :] < rng.integers(1, K + 1, (B, 1)))
+    pss = jnp.asarray(rng.uniform(0.05, 0.95, (B, K)), jnp.float32)
+    p_death = jnp.asarray(rng.uniform(0.0, 0.5, (B, K)), jnp.float32)
+    p_reset = jnp.asarray(rng.uniform(0.05, 0.95, (B, K)), jnp.float32)
+    return logits, clicks, mask, pss, p_death, p_reset, 1.0 - p_reset
+
+
+def _fm_inputs(rng, shape, dtype):
+    B, F, D = shape
+    return (jnp.asarray(rng.normal(size=(B, F, D)), dtype),)
+
+
+def _dcn_inputs(rng, shape, dtype):
+    B, D = shape
+    x0 = jnp.asarray(rng.normal(size=(B, D)), dtype)
+    x = jnp.asarray(rng.normal(size=(B, D)), dtype)
+    w = jnp.asarray(rng.normal(size=(D, D)) / np.sqrt(D), dtype)
+    b = jnp.asarray(rng.normal(size=(D,)), dtype)
+    return x0, x, w, b
+
+
+def _flash_inputs(rng, shape, dtype):
+    B, Hq, Hkv, Sq, Skv, Dh = shape
+    scale = 1.0 / np.sqrt(Dh)
+    q = jnp.asarray(rng.normal(size=(B, Hq, Sq, Dh)) * scale, dtype)
+    k = jnp.asarray(rng.normal(size=(B, Hkv, Skv, Dh)), dtype)
+    v = jnp.asarray(rng.normal(size=(B, Hkv, Skv, Dh)), dtype)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# extreme-logit / fully-masked corpus (mirrors tests/test_recursions.py)
+# ---------------------------------------------------------------------------
+
+def _session_extreme_cases():
+    B, K = 4, 10
+    ones = jnp.ones((B, K), jnp.float32)
+    full = jnp.ones((B, K), bool)
+    empty = jnp.zeros((B, K), bool)
+    ragged = jnp.asarray(np.arange(K)[None, :] < [[3], [1], [10], [5]])
+    cases = []
+    for xv in (36.0, -36.0, 0.0):
+        for clicks in (jnp.zeros((B, K)), ones,
+                       ones * (np.arange(K)[None, :] % 2 == 0)):
+            for mask in (full, empty, ragged):
+                cases.append((ones * xv, clicks, mask))
+    return cases
+
+
+def _examination_extreme_cases():
+    """All-36-logit chain factors (SDBN/DBN shape): every sigmoid saturated,
+    the odds recurrence pinned at its cap, plus empty/ragged masks."""
+    B, K = 4, 10
+    ones = jnp.ones((B, K), jnp.float32)
+    full = jnp.ones((B, K), bool)
+    empty = jnp.zeros((B, K), bool)
+    cases = []
+    for xv in (36.0, -36.0):
+        x = ones * xv
+        e = float(np.exp(-abs(xv)))
+        g = 1.0 / (1.0 + e) if xv >= 0 else e / (1.0 + e)
+        gn = e / (1.0 + e) if xv >= 0 else 1.0 / (1.0 + e)
+        for sv in (36.0, -36.0):
+            es = float(np.exp(-abs(sv)))
+            sat = 1.0 / (1.0 + es) if sv >= 0 else es / (1.0 + es)
+            no_sat = es / (1.0 + es) if sv >= 0 else 1.0 / (1.0 + es)
+            for clicks in (jnp.zeros((B, K)), ones,
+                           ones * (np.arange(K)[None, :] % 2 == 0)):
+                for mask in (full, empty):
+                    cases.append((x, clicks, mask, ones * gn,
+                                  jnp.zeros((B, K)), ones * no_sat,
+                                  ones * sat))
+    return cases
+
+
+# ---------------------------------------------------------------------------
+# the registry of specs (all 6 kernels)
+# ---------------------------------------------------------------------------
+
+KERNEL_SPECS: Tuple[KernelSpec, ...] = (
+    KernelSpec(
+        name="embedding_bag",
+        call=lambda args, impl: kernels.embedding_bag(*args, impl=impl),
+        make_inputs=_bag_inputs,
+        # (B, L, N, D): D below / at / straddling the 128-lane width; L=1
+        # single-slot bags.
+        shapes=((7, 3, 50, 64), (8, 1, 40, 128), (5, 4, 33, 130)),
+        diff_argnums=(0, 2),
+        grad_impls=IMPLS,  # custom VJP: one backward for every impl
+    ),
+    KernelSpec(
+        name="session_nll",
+        call=lambda args, impl: kernels.session_nll(*args, impl=impl),
+        make_inputs=_session_inputs,
+        # (B, K): at / straddling the 256-row block and the 128-lane width.
+        shapes=((8, 10), (256, 128), (300, 130)),
+        diff_argnums=(0, 1),
+        grad_impls=IMPLS,
+        extreme_cases=_session_extreme_cases,
+    ),
+    KernelSpec(
+        name="examination_nll",
+        call=lambda args, impl: kernels.examination_nll(*args, impl=impl),
+        make_inputs=_examination_inputs,
+        shapes=((8, 10), (256, 128), (300, 130)),
+        diff_argnums=(0, 3, 4, 5, 6),
+        grad_impls=IMPLS,
+        extreme_cases=_examination_extreme_cases,
+        extreme_bounded_argnums=(0,),  # logits only, see field docstring
+    ),
+    KernelSpec(
+        name="fm_interaction",
+        call=lambda args, impl: kernels.fm_interaction(*args, impl=impl),
+        make_inputs=_fm_inputs,
+        # (B, F, D): B at / straddling the 128-row block.
+        shapes=((8, 5, 64), (128, 3, 128), (130, 4, 130)),
+        diff_argnums=(0,),
+        grad_impls=("ref", "xla"),  # Pallas lowering is forward-only
+    ),
+    KernelSpec(
+        name="dcn_cross",
+        call=lambda args, impl: kernels.dcn_cross(*args, impl=impl),
+        make_inputs=_dcn_inputs,
+        shapes=((8, 64), (256, 128), (300, 130)),
+        diff_argnums=(0, 1, 2, 3),
+        grad_impls=("ref", "xla"),
+    ),
+    KernelSpec(
+        name="flash_attention",
+        call=lambda args, impl: kernels.flash_attention(*args, impl=impl),
+        make_inputs=_flash_inputs,
+        # (B, Hq, Hkv, Sq, Skv, Dh): GQA groups, sequence lengths below / at
+        # / straddling the 128 block (130 forces the shrunk-divisor k-block).
+        shapes=((2, 4, 2, 16, 16, 32), (1, 2, 2, 128, 128, 64),
+                (1, 2, 1, 130, 130, 64)),
+        diff_argnums=(0, 1, 2),
+        grad_impls=("ref", "xla"),
+    ),
+)
+
+SPECS_BY_NAME: Dict[str, KernelSpec] = {s.name: s for s in KERNEL_SPECS}
+
+
+# ---------------------------------------------------------------------------
+# checks
+# ---------------------------------------------------------------------------
+
+def _tol(dtype) -> Tuple[float, float]:
+    return TOLS[jnp.dtype(dtype).name]
+
+
+def check_value(spec: KernelSpec, impl: str, shape: tuple,
+                dtype=jnp.float32, seed: int = 0) -> None:
+    """Forward parity of ``impl`` against the ref oracle."""
+    rng = np.random.default_rng(seed)
+    args = spec.make_inputs(rng, shape, dtype)
+    got = np.asarray(spec.call(args, impl), np.float32)
+    want = np.asarray(spec.call(args, "ref"), np.float32)
+    rtol, atol = _tol(dtype)
+    np.testing.assert_allclose(got, want, rtol=rtol, atol=atol,
+                               err_msg=f"{spec.name}[{impl}] value {shape}")
+
+
+def _projected_scalar(spec: KernelSpec, args: tuple, impl: str, proj):
+    """sum(out * proj): scalarizes array outputs with a fixed projection so
+    one jax.grad exercises every output element's cotangent."""
+    diff_args = tuple(args[i] for i in spec.diff_argnums)
+
+    def scalar(*diff):
+        full = list(args)
+        for i, a in zip(spec.diff_argnums, diff):
+            full[i] = a
+        out = spec.call(tuple(full), impl)
+        return jnp.sum(out.astype(jnp.float32) * proj)
+
+    return jax.grad(scalar, argnums=tuple(range(len(diff_args))))(*diff_args)
+
+
+def check_grads(spec: KernelSpec, impl: str, shape: tuple,
+                dtype=jnp.float32, seed: int = 0) -> None:
+    """Gradient parity of ``impl`` against the ref oracle VJP."""
+    rng = np.random.default_rng(seed)
+    args = spec.make_inputs(rng, shape, dtype)
+    out = spec.call(args, "ref")
+    proj = jnp.asarray(rng.normal(size=np.shape(out)), jnp.float32)
+    got = _projected_scalar(spec, args, impl, proj)
+    want = _projected_scalar(spec, args, "ref", proj)
+    rtol, atol = _tol(dtype)
+    for i, (a, b) in zip(spec.diff_argnums, zip(got, want)):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            rtol=rtol, atol=atol,
+            err_msg=f"{spec.name}[{impl}] grad arg {i} {shape}")
+
+
+def check_extreme(spec: KernelSpec, impl: str,
+                  grad_bound: float = 100.0) -> None:
+    """NaN-freedom (values and gradients) on the adversarial corpus."""
+    if spec.extreme_cases is None:
+        return
+    for case_i, args in enumerate(spec.extreme_cases()):
+        out = np.asarray(spec.call(args, impl), np.float32)
+        assert np.all(np.isfinite(out)), \
+            f"{spec.name}[{impl}] non-finite value, extreme case {case_i}"
+        if impl in spec.grad_impls:
+            bounded = (spec.diff_argnums
+                       if spec.extreme_bounded_argnums is None
+                       else spec.extreme_bounded_argnums)
+            proj = jnp.ones(np.shape(jnp.asarray(out)), jnp.float32)
+            grads = _projected_scalar(spec, args, impl, proj)
+            for i, g in zip(spec.diff_argnums, grads):
+                g = np.asarray(g, np.float32)
+                assert np.all(np.isfinite(g)), \
+                    (f"{spec.name}[{impl}] non-finite grad arg {i}, "
+                     f"extreme case {case_i}")
+                if i in bounded:
+                    assert np.max(np.abs(g)) < grad_bound, \
+                        (f"{spec.name}[{impl}] grad arg {i} exceeds "
+                         f"{grad_bound}, extreme case {case_i}")
+
+
+def run_conformance(names: Optional[Sequence[str]] = None,
+                    impls: Sequence[str] = IMPLS,
+                    dtypes: Sequence = (jnp.float32,)) -> Dict[str, int]:
+    """Run the full sweep programmatically (CI helper). Raises on the first
+    violation; returns {kernel: cells checked} on success."""
+    report: Dict[str, int] = {}
+    for spec in KERNEL_SPECS:
+        if names is not None and spec.name not in names:
+            continue
+        cells = 0
+        for impl in impls:
+            for dtype in dtypes:
+                for shape in spec.shapes:
+                    check_value(spec, impl, shape, dtype)
+                    cells += 1
+                    if impl in spec.grad_impls:
+                        check_grads(spec, impl, shape, dtype)
+            check_extreme(spec, impl)
+        report[spec.name] = cells
+    return report

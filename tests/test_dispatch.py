@@ -1,0 +1,270 @@
+"""Dispatch-registry tests: resolution order, env/flag overrides, the
+no-retrace guarantee for compiled programs, and loss-parity pins showing the
+CTR family, the chain family, and a recsys model all train through the
+dispatch layer with per-step losses matching the pre-refactor compositions.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import kernels, optim
+from repro.core import MODEL_REGISTRY, DocumentCTR
+from repro.core.base import masked_mean
+from repro.kernels import dispatch, ref
+from repro.stable import log_bce
+from repro.train import TrainEngine
+
+IMPLS = dispatch.IMPLS
+K, B, N_DOCS = 5, 16, 40
+
+
+@pytest.fixture(autouse=True)
+def _clean_overrides():
+    """No test leaks programmatic overrides into the rest of the suite."""
+    saved = dict(dispatch._OVERRIDES)
+    yield
+    dispatch._OVERRIDES.clear()
+    dispatch._OVERRIDES.update(saved)
+
+
+def make_batch(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "positions": jnp.asarray(np.tile(np.arange(1, K + 1), (B, 1)), jnp.int32),
+        "query_doc_ids": jnp.asarray(rng.integers(0, N_DOCS, (B, K))),
+        "clicks": jnp.asarray(rng.integers(0, 2, (B, K)).astype(np.float32)),
+        "mask": jnp.asarray(np.arange(K)[None, :]
+                            < rng.integers(2, K + 1, (B, 1))),
+    }
+
+
+# ---------------------------------------------------------------------------
+# resolution order
+# ---------------------------------------------------------------------------
+
+def test_backend_default():
+    want = "pallas" if jax.default_backend() == "tpu" else "xla"
+    assert dispatch.default_impl() == want
+    for name in dispatch.registered_kernels():
+        assert dispatch.resolve_impl(name) == want
+
+
+def test_explicit_impl_beats_everything(monkeypatch):
+    monkeypatch.setenv(dispatch.ENV_GLOBAL, "xla")
+    with dispatch.override_impl("xla", session_nll="xla"):
+        assert dispatch.resolve_impl("session_nll", "ref") == "ref"
+
+
+def test_per_kernel_override_beats_global_override():
+    with dispatch.override_impl("xla", session_nll="ref"):
+        assert dispatch.resolve_impl("session_nll") == "ref"
+        assert dispatch.resolve_impl("embedding_bag") == "xla"
+
+
+def test_env_global_and_per_kernel(monkeypatch):
+    monkeypatch.setenv(dispatch.ENV_GLOBAL, "ref")
+    assert dispatch.resolve_impl("session_nll") == "ref"
+    assert dispatch.resolve_impl("fm_interaction") == "ref"
+    # per-kernel env var beats the global one
+    monkeypatch.setenv("CLAX_KERNEL_IMPL_SESSION_NLL", "pallas")
+    assert dispatch.resolve_impl("session_nll") == "pallas"
+    assert dispatch.resolve_impl("fm_interaction") == "ref"
+    # programmatic override beats both env vars
+    with dispatch.override_impl(session_nll="xla"):
+        assert dispatch.resolve_impl("session_nll") == "xla"
+    assert dispatch.resolve_impl("session_nll") == "pallas"
+
+
+def test_override_impl_restores_on_exit_and_on_error():
+    base = dispatch.resolve_impl("session_nll")
+    with pytest.raises(RuntimeError):
+        with dispatch.override_impl("ref"):
+            assert dispatch.resolve_impl("session_nll") == "ref"
+            raise RuntimeError("boom")
+    assert dispatch.resolve_impl("session_nll") == base
+
+
+def test_set_impl_override_none_clears():
+    dispatch.set_impl_override("ref", kernel="session_nll")
+    assert dispatch.resolve_impl("session_nll") == "ref"
+    dispatch.set_impl_override(None, kernel="session_nll")
+    assert dispatch.resolve_impl("session_nll") == dispatch.default_impl()
+
+
+def test_unknown_kernel_and_impl_errors():
+    with pytest.raises(KeyError, match="unknown kernel"):
+        dispatch.resolve_impl("not_a_kernel")
+    with pytest.raises(ValueError, match="impl must be one of"):
+        dispatch.set_impl_override("cuda")
+    with pytest.raises(ValueError, match="no impl"):
+        dispatch.resolve_impl("session_nll", "not_an_impl")
+
+
+def test_dispatch_invokes_resolved_callable():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(4, 6)), jnp.float32)
+    c = jnp.asarray(rng.integers(0, 2, (4, 6)), jnp.float32)
+    m = jnp.ones((4, 6), bool)
+    got = dispatch.dispatch("session_nll", "ref", x, c, m)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(ref.session_nll_ref(x, c, m)))
+    assert dispatch.get_impl("session_nll", "ref") is ref.session_nll_ref
+
+
+# ---------------------------------------------------------------------------
+# the no-retrace guarantee
+# ---------------------------------------------------------------------------
+
+def test_impl_flip_does_not_retrace_compiled_engine_chunk():
+    """Overrides resolve at trace time: flipping one after the TrainEngine's
+    scan-jitted chunk step has compiled must NOT retrace it (drill semantics:
+    flip the env var, restart the job). A Python-side counter inside the loss
+    closure counts traces — jit cache hits never re-enter Python."""
+    traces = []
+
+    def loss_fn(params, batch):
+        traces.append(dispatch.resolve_impl("session_nll"))
+        return kernels.session_nll(params["w"] * batch["x"],
+                                   batch["clicks"], batch["mask"])
+
+    engine = TrainEngine(None, optim.adamw(0.05), chunk_batches=2,
+                         loss_fn=loss_fn)
+    params = {"w": jnp.ones((), jnp.float32)}
+    opt_state = engine.init_opt_state(params)
+    rng = np.random.default_rng(0)
+
+    def chunk():
+        return {"x": jnp.asarray(rng.normal(size=(2, 8, K)), jnp.float32),
+                "clicks": jnp.asarray(rng.integers(0, 2, (2, 8, K)),
+                                      jnp.float32),
+                "mask": jnp.ones((2, 8, K), bool)}
+
+    params, opt_state, losses = engine.step(params, opt_state, chunk())
+    assert traces and set(traces) == {dispatch.default_impl()}
+    n_traces = len(traces)
+
+    with dispatch.override_impl("ref"):
+        # a fresh trace would resolve to "ref" ...
+        assert dispatch.resolve_impl("session_nll") == "ref"
+        params, opt_state, losses = engine.step(params, opt_state, chunk())
+    # ... but the compiled chunk step never re-entered Python.
+    assert len(traces) == n_traces
+    assert np.all(np.isfinite(np.asarray(losses)))
+
+
+# ---------------------------------------------------------------------------
+# loss parity with the pre-refactor paths (acceptance pins)
+# ---------------------------------------------------------------------------
+
+def _pre_refactor_loss(model):
+    """The PR 1 composition ``compute_loss`` replaced: per-position log-probs
+    through ``log_bce`` and a masked mean — no fused kernels, no dispatch."""
+    def loss(params, batch):
+        log_probs = model.predict_conditional_clicks(params, batch)
+        return masked_mean(log_bce(log_probs, batch["clicks"]), batch["mask"])
+    return loss
+
+
+@pytest.mark.parametrize("name", ["gctr", "rctr", "dctr"])
+def test_ctr_compute_loss_matches_pre_refactor_all_impls(name):
+    model = MODEL_REGISTRY[name](query_doc_pairs=N_DOCS, positions=K)
+    params = model.init(jax.random.PRNGKey(1))
+    params = jax.tree_util.tree_map(
+        lambda x: x + 0.5 * jax.random.normal(jax.random.PRNGKey(2), x.shape),
+        params)
+    batch = make_batch(3)
+    want = float(_pre_refactor_loss(model)(params, batch))
+    for impl in IMPLS:
+        with dispatch.override_impl(impl):
+            got = float(model.compute_loss(params, batch))
+        assert abs(got - want) <= 1e-5, (name, impl, got, want)
+
+
+@pytest.mark.parametrize("name", ["dcm", "ccm", "dbn", "sdbn"])
+def test_chain_compute_loss_matches_pre_refactor_all_impls(name):
+    model = MODEL_REGISTRY[name](query_doc_pairs=N_DOCS, positions=K)
+    params = model.init(jax.random.PRNGKey(4))
+    params = jax.tree_util.tree_map(
+        lambda x: x + 0.5 * jax.random.normal(jax.random.PRNGKey(5), x.shape),
+        params)
+    batch = make_batch(6)
+    want = float(_pre_refactor_loss(model)(params, batch))
+    for impl in IMPLS:
+        with dispatch.override_impl(impl):
+            got = float(model.compute_loss(params, batch))
+        assert abs(got - want) <= 1e-5, (name, impl, got, want)
+
+
+def test_ctr_trains_through_dispatch_with_matching_per_step_losses():
+    """A DCTR run through the engine's dispatched ``session_nll`` hot path
+    reproduces the pre-refactor log-space composition step for step."""
+    model = DocumentCTR(query_doc_pairs=N_DOCS, positions=K)
+    init = model.init(jax.random.PRNGKey(7))
+    rng = np.random.default_rng(8)
+    chunks = [jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs), *[make_batch(int(rng.integers(1 << 30)))
+                                     for _ in range(2)]) for _ in range(3)]
+
+    def run(loss_fn):
+        engine = TrainEngine(model, optim.adamw(0.05), chunk_batches=2,
+                             loss_fn=loss_fn)
+        params = jax.tree_util.tree_map(jnp.array, init)
+        opt_state = engine.init_opt_state(params)
+        losses = []
+        for chunk in chunks:
+            params, opt_state, l = engine.step(params, opt_state, chunk)
+            losses.extend(np.asarray(l).tolist())
+        return losses
+
+    new = run(None)  # model.compute_loss -> dispatched session_nll
+    old = run(_pre_refactor_loss(model))
+    np.testing.assert_allclose(new, old, atol=1e-5, rtol=0)
+
+
+def test_deepfm_trains_through_dispatch_with_matching_per_step_losses():
+    """DeepFM's embedding_bag/fm_interaction hot path vs the pre-refactor
+    dense-lookup composition: identical per-step losses over a short run."""
+    from repro.models.recsys import DeepFM, DeepFMConfig
+    from repro.models.recsys.embedding import table_lookup
+
+    cfg = DeepFMConfig(name="d", n_sparse=6, embed_dim=8, mlp=(16,),
+                       table_rows=300)
+    model = DeepFM(cfg)
+    init = model.init(jax.random.PRNGKey(9))
+    rng = np.random.default_rng(10)
+    batches = [{"field_ids": jnp.asarray(rng.integers(0, 300, (32, 6))),
+                "labels": jnp.asarray(rng.integers(0, 2, 32).astype(np.float32))}
+               for _ in range(5)]
+
+    def old_loss(params, batch):
+        from repro.stable import log_sigmoid
+        ids = batch["field_ids"]
+        v = table_lookup(cfg.table, params["embedding"], ids)
+        first = table_lookup(cfg.first_order_table,
+                             params["first_order"], ids)[..., 0]
+        fm = ref.fm_interaction_ref(v)
+        deep = model.mlp(params["mlp"], v.reshape(v.shape[0], -1))[..., 0]
+        logits = params["bias"] + jnp.sum(first, axis=-1) + fm + deep
+        return jnp.mean(log_bce(log_sigmoid(logits), batch["labels"]))
+
+    def run(loss_fn):
+        tx = optim.adamw(1e-2)
+        step = jax.jit(lambda p, o, b: _sgd_step(loss_fn, tx, p, o, b))
+        params = jax.tree_util.tree_map(jnp.array, init)
+        opt_state = tx.init(params)
+        losses = []
+        for batch in batches:
+            params, opt_state, loss = step(params, opt_state, batch)
+            losses.append(float(loss))
+        return losses
+
+    new = run(model.loss)  # dispatched embedding_bag + fm_interaction
+    old = run(old_loss)
+    np.testing.assert_allclose(new, old, atol=1e-5, rtol=0)
+
+
+def _sgd_step(loss_fn, tx, params, opt_state, batch):
+    loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+    updates, opt_state = tx.update(grads, opt_state, params)
+    return optim.apply_updates(params, updates), opt_state, loss

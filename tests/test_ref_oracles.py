@@ -1,0 +1,235 @@
+"""Property/fuzz tests for the ref.py oracles themselves.
+
+The conformance harness measures every impl against these functions, so the
+ground truth needs its own pin: each oracle is checked against a brute-force
+numpy transcription (loops, float64) over hypothesis-drawn shapes, with the
+degenerate corners the harness's random inputs rarely hit — bags that are all
+padding, single-slot bags, zero weights, single-position sessions.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+
+RNG = np.random.default_rng(42)
+
+
+# ---------------------------------------------------------------------------
+# embedding_bag_ref
+# ---------------------------------------------------------------------------
+
+def _bag_brute(table, ids, weights):
+    B, L = ids.shape
+    out = np.zeros((B, table.shape[1]), np.float64)
+    for b in range(B):
+        for l in range(L):
+            if ids[b, l] >= 0:
+                out[b] += float(weights[b, l]) * table[ids[b, l]].astype(np.float64)
+    return out
+
+
+@given(st.integers(1, 10), st.integers(1, 6), st.integers(2, 30),
+       st.integers(1, 40))
+@settings(max_examples=15, deadline=None)
+def test_embedding_bag_ref_vs_brute_force(B, L, N, D):
+    table = RNG.normal(size=(N, D)).astype(np.float32)
+    ids = RNG.integers(-1, N, (B, L)).astype(np.int32)
+    w = RNG.normal(size=(B, L)).astype(np.float32)
+    got = np.asarray(ref.embedding_bag_ref(
+        jnp.asarray(table), jnp.asarray(ids), jnp.asarray(w)))
+    np.testing.assert_allclose(got, _bag_brute(table, ids, w),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_embedding_bag_ref_all_padding_is_zero():
+    table = jnp.asarray(RNG.normal(size=(8, 5)), jnp.float32)
+    ids = jnp.full((3, 4), -1, jnp.int32)
+    w = jnp.ones((3, 4), jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(ref.embedding_bag_ref(table, ids, w)), 0.0)
+
+
+def test_embedding_bag_ref_single_slot_is_row_scale():
+    table = jnp.asarray(RNG.normal(size=(8, 5)), jnp.float32)
+    ids = jnp.asarray([[3], [0], [7]], jnp.int32)
+    w = jnp.asarray([[2.0], [0.0], [-1.5]], jnp.float32)
+    got = np.asarray(ref.embedding_bag_ref(table, ids, w))
+    want = np.asarray(w) * np.asarray(table)[np.asarray(ids)[:, 0]]
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_embedding_bag_ref_zero_weights_zero_output_and_grad():
+    table = jnp.asarray(RNG.normal(size=(8, 5)), jnp.float32)
+    ids = jnp.asarray(RNG.integers(0, 8, (4, 3)), jnp.int32)
+    w = jnp.zeros((4, 3), jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(ref.embedding_bag_ref(table, ids, w)), 0.0)
+    g = jax.grad(lambda t: jnp.sum(ref.embedding_bag_ref(t, ids, w)))(table)
+    np.testing.assert_array_equal(np.asarray(g), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# session_nll_ref
+# ---------------------------------------------------------------------------
+
+def _session_brute(x, c, m):
+    x, c, m = (np.asarray(a, np.float64) for a in (x, c, m))
+    p = 1.0 / (1.0 + np.exp(-x))
+    nll = -(c * np.log(p) + (1.0 - c) * np.log1p(-p))
+    return float(np.sum(nll * m) / max(np.sum(m), 1.0))
+
+
+@given(st.integers(1, 12), st.integers(1, 12), st.floats(0.0, 1.0))
+@settings(max_examples=15, deadline=None)
+def test_session_nll_ref_vs_brute_force(B, K, click_p):
+    x = RNG.normal(size=(B, K)).astype(np.float32) * 3
+    c = (RNG.random((B, K)) < click_p).astype(np.float32)
+    m = RNG.random((B, K)) < 0.8
+    got = float(ref.session_nll_ref(jnp.asarray(x), jnp.asarray(c),
+                                    jnp.asarray(m)))
+    np.testing.assert_allclose(got, _session_brute(x, c, m),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_session_nll_ref_empty_mask_is_zero():
+    x = jnp.asarray(RNG.normal(size=(4, 6)), jnp.float32)
+    c = jnp.zeros((4, 6), jnp.float32)
+    m = jnp.zeros((4, 6), bool)
+    assert float(ref.session_nll_ref(x, c, m)) == 0.0
+
+
+def test_session_nll_ref_single_position():
+    x = jnp.asarray([[1.3]], jnp.float32)
+    for c in (0.0, 1.0):
+        got = float(ref.session_nll_ref(x, jnp.asarray([[c]]),
+                                        jnp.ones((1, 1), bool)))
+        np.testing.assert_allclose(got, _session_brute(x, [[c]], [[1.0]]),
+                                   rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# examination_nll_ref
+# ---------------------------------------------------------------------------
+
+def _examination_brute(x, c, m, pss, pd, pr, prn,
+                       floor=1e-9, cap=1e9):
+    """Float64 transcription of the death-odds recurrence + BCE."""
+    x, c, m, pss, pd, pr, prn = (np.asarray(a, np.float64)
+                                 for a in (x, c, m, pss, pd, pr, prn))
+    B, K = x.shape
+    loss, count = 0.0, 0.0
+    for b in range(B):
+        r = 0.0
+        for k in range(K):
+            p = (1.0 / (1.0 + np.exp(-x[b, k]))) / (1.0 + r)
+            nll = -(c[b, k] * np.log(p) + (1.0 - c[b, k]) * np.log1p(-p))
+            loss += nll * m[b, k]
+            count += m[b, k]
+            if c[b, k] > 0:
+                r = prn[b, k] / max(pr[b, k], floor)
+            else:
+                r = (r + pd[b, k]) / max(pss[b, k], floor)
+            r = min(r, cap)
+    return loss / max(count, 1.0)
+
+
+@given(st.integers(1, 8), st.integers(1, 10), st.floats(0.0, 1.0))
+@settings(max_examples=15, deadline=None)
+def test_examination_nll_ref_vs_brute_force(B, K, click_p):
+    x = RNG.normal(size=(B, K)).astype(np.float32) * 2
+    c = (RNG.random((B, K)) < click_p).astype(np.float32)
+    m = np.arange(K)[None, :] < RNG.integers(1, K + 1, (B, 1))
+    pss = RNG.uniform(0.2, 0.95, (B, K)).astype(np.float32)
+    pd = RNG.uniform(0.0, 0.4, (B, K)).astype(np.float32)
+    pr = RNG.uniform(0.2, 0.95, (B, K)).astype(np.float32)
+    prn = (1.0 - pr).astype(np.float32)
+    got = float(ref.examination_nll_ref(*map(jnp.asarray,
+                                             (x, c, m, pss, pd, pr, prn))))
+    want = _examination_brute(x, c, m, pss, pd, pr, prn)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_examination_nll_ref_single_position_is_plain_bce():
+    """K=1: the virtual sure-reset start means r=0, so the conditional NLL
+    collapses to the session BCE of the raw logits."""
+    x = jnp.asarray(RNG.normal(size=(6, 1)) * 3, jnp.float32)
+    c = jnp.asarray(RNG.integers(0, 2, (6, 1)), jnp.float32)
+    m = jnp.ones((6, 1), bool)
+    z = jnp.zeros((6, 1), jnp.float32)
+    o = jnp.ones((6, 1), jnp.float32)
+    got = float(ref.examination_nll_ref(x, c, m, o, z, o, z))
+    want = float(ref.session_nll_ref(x, c, m))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-7)
+
+
+def test_examination_nll_ref_empty_mask_is_zero():
+    z = jnp.zeros((3, 4), jnp.float32)
+    o = jnp.ones((3, 4), jnp.float32)
+    got = float(ref.examination_nll_ref(z, z, jnp.zeros((3, 4), bool),
+                                        o, z, o, z))
+    assert got == 0.0
+
+
+# ---------------------------------------------------------------------------
+# fm_interaction_ref / dcn_cross_ref / flash_attention_ref / segment_mean_ref
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 8), st.integers(1, 6), st.integers(1, 20))
+@settings(max_examples=15, deadline=None)
+def test_fm_interaction_ref_vs_pairwise_sum(B, F, D):
+    v = RNG.normal(size=(B, F, D)).astype(np.float32)
+    got = np.asarray(ref.fm_interaction_ref(jnp.asarray(v)))
+    v64 = v.astype(np.float64)
+    want = np.zeros(B)
+    for f1 in range(F):
+        for f2 in range(f1 + 1, F):
+            want += np.sum(v64[:, f1] * v64[:, f2], axis=-1)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_fm_interaction_ref_single_field_is_zero():
+    v = jnp.asarray(RNG.normal(size=(5, 1, 16)), jnp.float32)
+    np.testing.assert_allclose(np.asarray(ref.fm_interaction_ref(v)), 0.0,
+                               atol=1e-4)
+
+
+@given(st.integers(1, 8), st.integers(1, 24))
+@settings(max_examples=10, deadline=None)
+def test_dcn_cross_ref_identity_and_linearity(B, D):
+    x0 = jnp.asarray(RNG.normal(size=(B, D)), jnp.float32)
+    x = jnp.asarray(RNG.normal(size=(B, D)), jnp.float32)
+    # w = 0, b = 0: the layer is the identity on x.
+    zero_w = jnp.zeros((D, D), jnp.float32)
+    zero_b = jnp.zeros((D,), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(ref.dcn_cross_ref(x0, x, zero_w, zero_b)),
+        np.asarray(x), rtol=1e-6)
+    # w = 0, b = 1: y = x0 + x.
+    np.testing.assert_allclose(
+        np.asarray(ref.dcn_cross_ref(x0, x, zero_w, jnp.ones(D))),
+        np.asarray(x0) + np.asarray(x), rtol=1e-6, atol=1e-6)
+
+
+def test_flash_attention_ref_single_kv_returns_v():
+    q = jnp.asarray(RNG.normal(size=(2, 2, 5, 8)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(2, 2, 1, 8)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(2, 2, 1, 8)), jnp.float32)
+    got = np.asarray(ref.flash_attention_ref(q, k, v))
+    want = np.broadcast_to(np.asarray(v), (2, 2, 5, 8))
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+@given(st.integers(1, 20), st.integers(1, 5), st.integers(1, 8))
+@settings(max_examples=10, deadline=None)
+def test_segment_mean_ref_vs_brute_force(n, S, D):
+    vals = RNG.normal(size=(n, D)).astype(np.float32)
+    segs = RNG.integers(0, S, n).astype(np.int32)
+    got = np.asarray(ref.segment_mean_ref(jnp.asarray(vals),
+                                          jnp.asarray(segs), S))
+    for s in range(S):
+        rows = vals[segs == s]
+        want = rows.mean(axis=0) if len(rows) else np.zeros(D)
+        np.testing.assert_allclose(got[s], want, rtol=1e-5, atol=1e-5)
