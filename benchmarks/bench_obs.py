@@ -1,0 +1,149 @@
+"""Cost of zero-sync telemetry on the clean training path.
+
+Engine telemetry fuses per-step grad-norm / param-norm / lr scalars into
+the same scan-jitted chunk the loss already rides, so the per-step cost is
+two ``global_norm`` reductions on device and a few extra floats in the
+chunk payload — no extra dispatches, no extra host syncs (pinned by
+tests/test_obs.py). This benchmark measures what that costs at steady
+state, three ways:
+
+* ``telemetry_off``  — the bare engine loop (baseline);
+* ``telemetry_on``   — on-device telemetry drained through
+  ``TelemetryDrain`` with no sinks attached (device cost only);
+* ``telemetry_jsonl``— the full event pipeline: per-step metric events
+  rate-limited to every 10th step and written to a JSONL sink.
+
+Measures steps/sec through the real engine path, interleaved
+best-of-``--reps`` (walltime on shared CPU is noisy). Writes
+BENCH_obs.json next to this file (or --out). Target: telemetry_on
+overhead under 2% at chunk_batches=8.
+
+Run: PYTHONPATH=src python benchmarks/bench_obs.py [--sessions 60000]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+import time
+
+# Allow running without PYTHONPATH=src.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro import optim  # noqa: E402
+from repro.core import PositionBasedModel  # noqa: E402
+from repro.data import (ClickLogLoader, DevicePrefetcher,  # noqa: E402
+                        SyntheticConfig, generate_click_log)
+from repro.obs import JsonlSink, Recorder, TelemetryDrain  # noqa: E402
+from repro.train import TrainEngine  # noqa: E402
+
+
+def make_setup(args):
+    cfg = SyntheticConfig(n_sessions=args.sessions,
+                          n_queries=max(args.sessions // 200, 10),
+                          docs_per_query=20, positions=10, behavior="pbm",
+                          seed=0)
+    data, _ = generate_click_log(cfg)
+    model = PositionBasedModel(query_doc_pairs=cfg.n_query_doc_pairs,
+                               positions=cfg.positions, init_prob=0.2)
+    return cfg, data, model
+
+
+def run_engine(model, data, args, telemetry, recorder=None, every=1):
+    engine = TrainEngine(model, optim.adamw(args.lr),
+                         chunk_batches=args.chunk, telemetry=telemetry)
+    params = model.init(jax.random.PRNGKey(0))
+    opt_state = engine.init_opt_state(params)
+    loader = ClickLogLoader(data, batch_size=args.batch, seed=0)
+
+    def epoch():
+        nonlocal params, opt_state
+        acc = TelemetryDrain(recorder=recorder, every=every)
+        pending = None  # (payload, first global step), drained one behind
+        step = 0
+        t0 = time.perf_counter()
+        for chunk_arr, _, n in DevicePrefetcher(loader,
+                                                chunk_batches=args.chunk):
+            params, opt_state, out = engine.step(params, opt_state,
+                                                 chunk_arr)
+            if pending is not None:
+                acc.drain(*pending)
+            pending = (out, step)
+            step += n
+        if pending is not None:
+            acc.drain(*pending)
+        return acc.n_batches, time.perf_counter() - t0
+
+    return epoch
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sessions", type=int, default=60_000)
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--chunk", type=int, default=8)
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--out", default=os.path.join(os.path.dirname(__file__),
+                                                  "BENCH_obs.json"))
+    args = ap.parse_args()
+
+    cfg, data, model = make_setup(args)
+    jsonl_path = os.path.join(tempfile.mkdtemp(prefix="bench_obs_"),
+                              "metrics.jsonl")
+    sink_rec = Recorder(sinks=[JsonlSink(jsonl_path)])
+    variants = {
+        "telemetry_off": run_engine(model, data, args, telemetry=False),
+        "telemetry_on": run_engine(model, data, args, telemetry=True),
+        "telemetry_jsonl": run_engine(model, data, args, telemetry=True,
+                                      recorder=sink_rec, every=10),
+    }
+    # Warm every variant (compiles full + partial chunk shapes), then time
+    # interleaved so machine noise hits all variants alike.
+    for epoch in variants.values():
+        epoch()
+    best = {name: float("inf") for name in variants}
+    steps = {}
+    for _ in range(args.reps):
+        for name, epoch in variants.items():
+            n, sec = epoch()
+            steps[name] = n
+            best[name] = min(best[name], sec)
+    sink_rec.close()
+
+    results = {name: {"steps": steps[name], "seconds": best[name],
+                      "steps_per_s": steps[name] / best[name]}
+               for name in variants}
+    for name, r in results.items():
+        print(f"[bench_obs] {name:15s} {r['steps']:4d} steps in "
+              f"{r['seconds']:.3f}s  ({r['steps_per_s']:.1f} steps/s)")
+
+    telemetry_overhead = (results["telemetry_off"]["steps_per_s"] /
+                          results["telemetry_on"]["steps_per_s"]) - 1.0
+    sink_overhead = (results["telemetry_off"]["steps_per_s"] /
+                     results["telemetry_jsonl"]["steps_per_s"]) - 1.0
+    out = {
+        "sessions": args.sessions,
+        "batch": args.batch,
+        "chunk_batches": args.chunk,
+        "positions": cfg.positions,
+        "query_doc_pairs": cfg.n_query_doc_pairs,
+        "reps": args.reps,
+        "results": results,
+        "telemetry_overhead": telemetry_overhead,
+        "jsonl_sink_overhead": sink_overhead,
+    }
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"[bench_obs] wrote {args.out} (telemetry overhead "
+          f"{telemetry_overhead * 100:+.1f}%, jsonl sink "
+          f"{sink_overhead * 100:+.1f}%)")
+
+
+if __name__ == "__main__":
+    main()

@@ -73,6 +73,7 @@ import numpy as np
 
 from repro.data.loader import MODEL_KEYS
 from repro.data.store import SessionStore, ShardCorruptionError, _take_rows
+from repro.obs import get_recorder
 
 CORRUPT_POLICIES = ("raise", "skip")
 
@@ -123,7 +124,7 @@ class StreamingClickLogLoader:
                  verify_checksums: bool = False,
                  corrupt_policy: str = "raise",
                  io_retries: int = 0, io_retry_backoff: float = 0.05,
-                 watchdog_restarts: int = 1, log_fn=print):
+                 watchdog_restarts: int = 1, log_fn=print, recorder=None):
         self.store = (SessionStore(store)
                       if isinstance(store, (str, os.PathLike)) else store)
         if host_count > 1 and self.store.n_shards < host_count:
@@ -174,6 +175,13 @@ class StreamingClickLogLoader:
         self.io_retry_backoff = float(io_retry_backoff)
         self.watchdog_restarts = int(watchdog_restarts)
         self.log_fn = log_fn
+        # Telemetry (repro.obs): spans around shard reads/crc verifies/retry
+        # waits, `stream.*` counters (bytes_read, sessions, io_retries,
+        # watchdog_restarts, queue_stall_s, quarantined_shards), a read-ahead
+        # queue-depth gauge, and quarantine/watchdog_restart events. With no
+        # recorder pinned, everything goes to the process-global one —
+        # disabled (no sinks) means spans land only in the host ring buffer.
+        self.recorder = recorder
         self.quarantined: set = set()
         # One shard spanning the whole loader degenerates to the in-memory
         # loader's order: in-shard seed (seed, epoch) == ClickLogLoader.
@@ -226,8 +234,14 @@ class StreamingClickLogLoader:
         return plan
 
     # -- reading ---------------------------------------------------------------
+    def _rec(self):
+        return self.recorder if self.recorder is not None else get_recorder()
+
     def _quarantine(self, sid: int, err: BaseException) -> None:
         self.quarantined.add(sid)
+        rec = self._rec()
+        rec.event("quarantine", data={"shard": int(sid), "error": repr(err)})
+        rec.add("stream.quarantined_shards")
         self.log_fn(f"[streaming] QUARANTINED shard {sid}: {err} — its rows "
                     f"are dropped from this and every later epoch "
                     f"({self._quarantined_rows()} rows quarantined total)")
@@ -236,12 +250,17 @@ class StreamingClickLogLoader:
         """Open (and optionally crc-verify) one shard with transient-IO
         retries. :class:`ShardCorruptionError` is deterministic and
         propagates immediately; ``OSError`` backs off exponentially."""
+        rec = self._rec()
         attempt = 0
         while True:
             try:
-                cols = self.store.open_shard(sid, columns=self.keys)
-                if self.verify_checksums:
-                    self.store.verify(sid, columns=self.keys)
+                with rec.span("shard_read", shard=sid):
+                    cols = self.store.open_shard(sid, columns=self.keys)
+                    if self.verify_checksums:
+                        with rec.span("crc_verify", shard=sid):
+                            self.store.verify(sid, columns=self.keys)
+                rec.add("stream.bytes_read",
+                        sum(np.asarray(v).nbytes for v in cols.values()))
                 return cols
             except ShardCorruptionError:
                 raise
@@ -250,10 +269,12 @@ class StreamingClickLogLoader:
                     raise
                 delay = self.io_retry_backoff * (2 ** attempt)
                 attempt += 1
+                rec.add("stream.io_retries")
                 self.log_fn(f"[streaming] transient IO error on shard {sid} "
                             f"(attempt {attempt}/{self.io_retries + 1}): "
                             f"{e!r}; retrying in {delay:.2f}s")
-                time.sleep(delay)
+                with rec.span("io_retry_wait", shard=sid, attempt=attempt):
+                    time.sleep(delay)
 
     def _read_plan(self, epoch: int,
                    entries: Sequence[Tuple[Tuple[int, int, int, int], int]],
@@ -327,9 +348,17 @@ class StreamingClickLogLoader:
 
         thread = start_worker()
         restarts_left = self.watchdog_restarts
+        rec = self._rec()
         try:
             while True:
+                # Queue-stall time = how long the consumer sat waiting on the
+                # producer: the direct measure of an IO-bound epoch. The
+                # depth gauge after the get shows how much read-ahead is
+                # actually banked.
+                t_wait = time.monotonic()
                 item = q.get()
+                rec.add("stream.queue_stall_s", time.monotonic() - t_wait)
+                rec.gauge("stream.queue_depth", q.qsize())
                 if item is _DONE:
                     return
                 if isinstance(item, _WorkerError):
@@ -337,6 +366,11 @@ class StreamingClickLogLoader:
                     if restarts_left > 0 and not isinstance(
                             err, ShardCorruptionError):
                         restarts_left -= 1
+                        rec.event("watchdog_restart",
+                                  data={"error": repr(err),
+                                        "plan_entry": progress["next"],
+                                        "restarts_left": restarts_left})
+                        rec.add("stream.watchdog_restarts")
                         self.log_fn(
                             f"[streaming] read-ahead producer died ({err!r});"
                             f" restarting from plan entry "
@@ -382,6 +416,7 @@ class StreamingClickLogLoader:
                 cum += rows
             parts: List[Dict[str, np.ndarray]] = []
             buffered = 0
+            rec = self._rec()
             blocks = self._block_stream(epoch, entries)
             try:
                 for shard_pos, block in blocks:
@@ -392,6 +427,7 @@ class StreamingClickLogLoader:
                         buffered -= self.batch_size
                         self.state.step += 1
                         self.state.shard = shard_pos
+                        rec.add("stream.sessions", self.batch_size)
                         yield batch
                     if self.state.step >= nb:
                         break  # epoch cap reached; don't read surplus windows
@@ -399,6 +435,7 @@ class StreamingClickLogLoader:
                         and self.state.step < nb):
                     batch = _take_rows(parts, buffered)
                     self.state.step += 1
+                    rec.add("stream.sessions", buffered)
                     yield batch
             finally:
                 blocks.close()  # stops the read-ahead thread

@@ -29,7 +29,19 @@ def main():
     ap.add_argument("--requests", type=int, default=50)
     ap.add_argument("--batch", type=int, default=512)
     ap.add_argument("--positions", type=int, default=10)
+    ap.add_argument("--metrics-out", default=None,
+                    help="write per-request latency metric events and the "
+                         "final serve summary as JSONL telemetry")
+    ap.add_argument("--trace-out", default=None,
+                    help="export per-request dispatch spans as Chrome-trace "
+                         "JSON (Perfetto)")
     args = ap.parse_args()
+
+    from repro import obs
+
+    recorder = obs.get_recorder()
+    if args.metrics_out:
+        recorder = obs.configure(sinks=[obs.JsonlSink(args.metrics_out)])
 
     attraction = EmbeddingParameterConfig(
         parameters=args.pairs, compression=Compression.HASH,
@@ -60,18 +72,34 @@ def main():
         }
 
     # warmup compile
-    jax.block_until_ready(serve(params, request(args.batch)))
+    with recorder.span("serve_warmup", batch=args.batch):
+        jax.block_until_ready(serve(params, request(args.batch)))
     lat = []
-    for _ in range(args.requests):
+    for i in range(args.requests):
         b = request(args.batch)
         t0 = time.perf_counter()
-        jax.block_until_ready(serve(params, b))
-        lat.append((time.perf_counter() - t0) * 1e3)
+        with recorder.span("serve_batch", request=i, batch=args.batch):
+            jax.block_until_ready(serve(params, b))
+        ms = (time.perf_counter() - t0) * 1e3
+        lat.append(ms)
+        recorder.metric("serve_latency_ms", ms, step=i)
+        recorder.add("serve.requests")
+        recorder.add("serve.sessions", args.batch)
     lat = np.asarray(lat)
+    summary = {"requests": args.requests, "batch": args.batch,
+               "p50_ms": float(np.percentile(lat, 50)),
+               "p99_ms": float(np.percentile(lat, 99)),
+               "throughput_sessions_s": float(args.batch / lat.mean() * 1e3)}
+    recorder.event("serve_summary", data=summary)
+    recorder.flush_counters()
+    if args.trace_out:
+        n_spans = recorder.export_chrome_trace(args.trace_out)
+        print(f"[serve] {n_spans} spans -> {args.trace_out}")
+    recorder.close()
     print(f"[serve] {args.requests} requests x batch {args.batch}: "
-          f"p50={np.percentile(lat, 50):.2f}ms "
-          f"p99={np.percentile(lat, 99):.2f}ms "
-          f"throughput={args.batch / lat.mean() * 1e3:.0f} sessions/s")
+          f"p50={summary['p50_ms']:.2f}ms "
+          f"p99={summary['p99_ms']:.2f}ms "
+          f"throughput={summary['throughput_sessions_s']:.0f} sessions/s")
 
 
 if __name__ == "__main__":

@@ -190,6 +190,28 @@ def main():
                          "implementation (default: backend-resolved — "
                          "pallas on TPU, xla elsewhere); equivalent to "
                          "CLAX_KERNEL_IMPL but set before the engine traces")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write structured telemetry events (JSONL, one per "
+                         "line — see README 'Observability') to this file; "
+                         "also enables the engine's on-device per-step "
+                         "grad/param-norm series")
+    ap.add_argument("--trace-out", default=None,
+                    help="export host wall-time spans (epoch/eval/checkpoint/"
+                         "shard_read/...) as a Chrome-trace JSON for Perfetto "
+                         "at the end of the run")
+    ap.add_argument("--obs-every", type=int, default=1,
+                    help="emit every Nth per-step train metric event "
+                         "(loss/grad-norm/...); skips and epoch records are "
+                         "always emitted")
+    ap.add_argument("--profile-steps", default=None, metavar="A:B",
+                    help="open a jax.profiler trace window around the chunk "
+                         "dispatches covering global steps A..B")
+    ap.add_argument("--profile-dir", default="profile",
+                    help="directory the --profile-steps trace is written to")
+    ap.add_argument("--emit-roofline", action="store_true",
+                    help="emit the compiled chunk step's static HLO cost "
+                         "(flops/bytes, while-loops scaled by trip count) as "
+                         "a roofline telemetry event (one extra AOT compile)")
     args = ap.parse_args()
     if args.max_restarts:
         if not args.ckpt_dir:
@@ -236,6 +258,17 @@ def main():
         from repro.kernels import set_impl_override
 
         set_impl_override(args.kernel_impl)
+
+    # Observability: configure the process-global recorder BEFORE the loaders
+    # exist so the streaming data plane's spans/counters land in the same
+    # stream. Spans are always captured in the host ring buffer (for
+    # --trace-out); the JSONL sink is attached only under --metrics-out.
+    from repro import obs
+
+    recorder = obs.get_recorder()
+    if args.metrics_out:
+        recorder = obs.configure(sinks=[obs.JsonlSink(args.metrics_out)])
+        print(f"[train] telemetry -> {args.metrics_out}")
 
     mesh = None
     if args.data_parallel:
@@ -288,9 +321,23 @@ def main():
                       replica_seeds=args.replica_seeds,
                       nonfinite_guard=args.nonfinite_guard,
                       step_budget_seconds=args.step_budget_seconds,
-                      seed=args.seed)
-    trainer.train(model, train_loader, val_loader, resume=bool(args.ckpt_dir))
-    results = trainer.test(model, test_loader)
+                      seed=args.seed,
+                      telemetry=bool(args.metrics_out),
+                      obs_every=args.obs_every,
+                      profile_steps=args.profile_steps,
+                      profile_dir=args.profile_dir,
+                      emit_roofline=args.emit_roofline)
+    try:
+        trainer.train(model, train_loader, val_loader,
+                      resume=bool(args.ckpt_dir))
+        results = trainer.test(model, test_loader)
+    finally:
+        if args.trace_out:
+            n_spans = recorder.export_chrome_trace(args.trace_out)
+            print(f"[train] {n_spans} spans -> {args.trace_out} "
+                  "(open in Perfetto / chrome://tracing)")
+        recorder.flush_counters()
+        recorder.close()
     if args.replicas is None:
         print("[train] test:", {k: round(v, 4) for k, v in results.items()
                                 if k != "per_rank"})

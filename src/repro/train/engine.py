@@ -53,6 +53,19 @@ them one at a time. The engine replaces it with a chunked execution core:
   the mesh sees only elementwise selects, and the sparse path's scatter
   results are discarded by the same select. Guard off is byte-for-byte
   the unguarded engine.
+* **On-device telemetry** — ``telemetry=True`` computes per-step scalars
+  (global grad-norm, post-update param-norm, and the injected learning
+  rate when the optimizer carries one) *inside* the scanned step and
+  stacks them next to the per-step losses the caller already drains one
+  chunk behind. The telemetry rides the existing chunk payload: enabling
+  it adds **zero extra host syncs per step** and zero extra dispatches,
+  does not retrace the compiled chunk across steps, and leaves the update
+  math untouched (params are bit-identical to ``telemetry=False`` —
+  pinned by tests/test_obs.py). The payload becomes a dict
+  ``{"loss", "grad_norm", "param_norm"[, "lr"][, "skipped"]}`` of
+  ``(n,)`` — or ``(n, R)`` — arrays; feed it to
+  :class:`repro.obs.TelemetryDrain` to accumulate epoch stats and emit
+  per-step events.
 """
 from __future__ import annotations
 
@@ -132,7 +145,8 @@ class TrainEngine:
                  sparse_table_kwargs: Optional[Dict[str, Any]] = None,
                  loss_fn: Optional[Callable] = None,
                  replicas: Optional[int] = None,
-                 nonfinite_guard: bool = False):
+                 nonfinite_guard: bool = False,
+                 telemetry: bool = False):
         if chunk_batches < 1:
             raise ValueError(f"chunk_batches must be >= 1, got {chunk_batches}")
         if replicas is not None and replicas < 1:
@@ -143,6 +157,7 @@ class TrainEngine:
         self.mesh = mesh
         self.replicas = None if replicas is None else int(replicas)
         self.nonfinite_guard = bool(nonfinite_guard)
+        self.telemetry = bool(telemetry)
         self.loss_fn = loss_fn or model.compute_loss
         self.sparse_parts = discover_sparse_tables(model) if sparse_tables else {}
         if self.sparse_parts:
@@ -307,10 +322,29 @@ class TrainEngine:
             sparse_state[key] = st
         return new_params, {"dense": dense_state, "sparse": sparse_state}
 
+    def _telemetry_out(self, out, grads, params, opt_state):
+        """Fill the per-step telemetry series (device scalars that stack
+        into the scan's ys — they leave the device only when the caller
+        drains the chunk payload, never per step). ``param_norm`` is taken
+        post-update (and post-skip-select on the guarded path), so a
+        skipped step reports the norm of the params it kept."""
+        out["grad_norm"] = optim_lib.global_norm(grads)
+        out["param_norm"] = optim_lib.global_norm(params)
+        lr = optim_lib.get_injected_lr(opt_state)
+        if lr is not None:
+            out["lr"] = lr
+        return out
+
     def _one_step(self, params, opt_state, batch):
+        """One optimizer step. Returns the new state plus the per-step
+        output dict: always ``{"loss"}``, extended with the telemetry
+        series when ``telemetry=True``."""
         loss, grads = jax.value_and_grad(self.loss_fn)(params, batch)
         params, opt_state = self._apply_update(params, opt_state, grads, batch)
-        return params, opt_state, loss
+        out = {"loss": loss}
+        if self.telemetry:
+            out = self._telemetry_out(out, grads, params, opt_state)
+        return params, opt_state, out
 
     def _guarded_one_step(self, params, opt_state, batch):
         """One step that survives a non-finite loss or gradient.
@@ -320,8 +354,9 @@ class TrainEngine:
         ``cond`` would break vmap/batching) and a per-leaf ``where`` carries
         the *old* params and opt_state through when ``ok`` is false — the
         poisoned step is skipped in place, with no host sync and no retrace.
-        Returns the loss (non-finite on a skipped step — the trainer drains
-        it as telemetry, not into the epoch mean) and the skip flag.
+        The output dict carries the loss (non-finite on a skipped step —
+        the trainer drains it as telemetry, not into the epoch mean) and
+        the skip flag.
         """
         loss, grads = jax.value_and_grad(self.loss_fn)(params, batch)
         ok = jnp.isfinite(loss)
@@ -335,13 +370,21 @@ class TrainEngine:
 
         params = jax.tree_util.tree_map(keep, new_params, params)
         opt_state = jax.tree_util.tree_map(keep, new_opt, opt_state)
-        return params, opt_state, loss, ~ok
+        out = {"loss": loss, "skipped": ~ok}
+        if self.telemetry:
+            out = self._telemetry_out(out, grads, params, opt_state)
+        return params, opt_state, out
+
+    def _step_out_ys(self, out):
+        """A bare-loss ys keeps the telemetry-off payload identical to the
+        historical ``(n,)`` array; any extra key promotes it to a dict."""
+        return out["loss"] if set(out) == {"loss"} else out
 
     def _chunk_step(self, params, opt_state, chunk):
         def body(carry, batch):
             params, opt_state = carry
-            params, opt_state, loss = self._one_step(params, opt_state, batch)
-            return (params, opt_state), loss
+            params, opt_state, out = self._one_step(params, opt_state, batch)
+            return (params, opt_state), self._step_out_ys(out)
 
         (params, opt_state), losses = jax.lax.scan(
             body, (params, opt_state), chunk)
@@ -350,9 +393,9 @@ class TrainEngine:
     def _chunk_step_guarded(self, params, opt_state, chunk):
         def body(carry, batch):
             params, opt_state = carry
-            params, opt_state, loss, skipped = self._guarded_one_step(
+            params, opt_state, out = self._guarded_one_step(
                 params, opt_state, batch)
-            return (params, opt_state), {"loss": loss, "skipped": skipped}
+            return (params, opt_state), out
 
         (params, opt_state), telemetry = jax.lax.scan(
             body, (params, opt_state), chunk)
@@ -364,15 +407,14 @@ class TrainEngine:
             # vmapping the guarded step gives each replica its own on-device
             # ok flag: a NaN batch (broadcast to all replicas) or a replica
             # whose own trajectory diverged skips only where it is non-finite.
-            new_p, new_o, loss, skipped = jax.vmap(
+            new_p, new_o, out = jax.vmap(
                 self._guarded_one_step,
                 in_axes=(0, 0, None))(params, opt_state, batch)
         else:
-            new_p, new_o, loss = jax.vmap(
+            new_p, new_o, out = jax.vmap(
                 self._one_step, in_axes=(0, 0, None))(params, opt_state, batch)
-            skipped = None
         if active is None:
-            return new_p, new_o, loss, skipped
+            return new_p, new_o, out
 
         def keep(new, old):
             # Freeze inactive replicas in place: expand the (R,) mask to the
@@ -384,19 +426,17 @@ class TrainEngine:
 
         params = jax.tree_util.tree_map(keep, new_p, params)
         opt_state = jax.tree_util.tree_map(keep, new_o, opt_state)
-        if skipped is not None:
+        if "skipped" in out:
             # A frozen replica attempted no update — don't report it skipped.
-            skipped = skipped & active
-        return params, opt_state, loss, skipped
+            out["skipped"] = out["skipped"] & active
+        return params, opt_state, out
 
     def _replica_chunk_body(self, params, opt_state, chunk, active):
         def body(carry, batch):
             params, opt_state = carry
-            params, opt_state, loss, skipped = self._replica_one_step(
+            params, opt_state, out = self._replica_one_step(
                 params, opt_state, batch, active)
-            ys = (loss if skipped is None
-                  else {"loss": loss, "skipped": skipped})
-            return (params, opt_state), ys
+            return (params, opt_state), self._step_out_ys(out)
 
         (params, opt_state), losses = jax.lax.scan(
             body, (params, opt_state), chunk)
@@ -417,7 +457,11 @@ class TrainEngine:
         chunk. With ``nonfinite_guard=True`` the loss payload is instead a
         dict ``{"loss": (n,)|(n, R), "skipped": same-shape bool}`` where
         ``skipped[i]`` marks a step whose non-finite loss/grads were
-        discarded (params and opt_state carried through unchanged).
+        discarded (params and opt_state carried through unchanged). With
+        ``telemetry=True`` the dict additionally carries per-step
+        ``grad_norm``/``param_norm`` (and ``lr`` for inject_lr optimizers)
+        series of the same shape — drain it with
+        :class:`repro.obs.TelemetryDrain`.
 
         With replicas, ``active`` is an optional ``(R,)`` bool mask (default
         all-on): inactive replicas' state is frozen in place. An all-true
@@ -431,3 +475,19 @@ class TrainEngine:
         if active is None or bool(np.asarray(active).all()):
             return self._step(params, opt_state, chunk)
         return self._step_masked(params, opt_state, chunk, jnp.asarray(active))
+
+    def roofline(self, params, opt_state, chunk) -> Dict[str, Any]:
+        """Static per-dispatch cost of the compiled chunk step: lower +
+        compile for these arg shapes and run the while-aware HLO cost model
+        (:func:`repro.launch.hlo_cost.analyze_hlo`), so the scan body is
+        scaled by its trip count. This is an extra AOT compile of the same
+        program — gate it behind a flag (``Trainer(emit_roofline=True)``
+        emits it once, as a ``roofline`` telemetry event)."""
+        from repro.launch.hlo_cost import analyze_hlo
+
+        hlo = self._step.lower(params, opt_state, chunk).compile().as_text()
+        cost = analyze_hlo(hlo)
+        n = jax.tree_util.tree_leaves(chunk)[0].shape[0]
+        cost["chunk_batches"] = int(n)
+        cost["flops_per_step"] = cost["flops"] / max(n, 1)
+        return cost

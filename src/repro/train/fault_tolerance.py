@@ -122,14 +122,18 @@ class StepWatchdog:
 
     The Trainer creates one when ``step_budget_seconds`` is set and calls
     ``check`` with each chunk's mean per-step time; violations are counted
-    into the epoch record (``watchdog_violations``) and reported through
-    ``on_violation`` so a stuck collective shows up instead of silently
-    stretching the run.
+    into the epoch record (``watchdog_violations``), reported through
+    ``on_violation``, and emitted as ``watchdog_violation`` telemetry
+    events (with the measured seconds and the budget) on ``recorder`` —
+    the global one by default — so a stuck collective shows up in the
+    metrics stream, not just the log.
     """
 
-    def __init__(self, budget_seconds: float, on_violation: Optional[Callable] = None):
+    def __init__(self, budget_seconds: float,
+                 on_violation: Optional[Callable] = None, recorder=None):
         self.budget = budget_seconds
         self.on_violation = on_violation
+        self.recorder = recorder
         self.violations = 0
 
     def check(self, step_seconds: float, step: int):
@@ -137,4 +141,12 @@ class StepWatchdog:
             self.violations += 1
             if self.on_violation is not None:
                 self.on_violation(step, step_seconds)
+            rec = self.recorder
+            if rec is None:
+                from repro.obs import get_recorder
+
+                rec = get_recorder()
+            rec.event("watchdog_violation", float(step_seconds), step=int(step),
+                      data={"budget_seconds": float(self.budget)})
+            rec.add("watchdog_violations")
         return self.violations

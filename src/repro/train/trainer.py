@@ -38,6 +38,8 @@ import numpy as np
 from repro.core.metrics import (ConditionalPerplexity, LogLikelihood, MultiMetric,
                                 Perplexity)
 from repro.data.loader import DevicePrefetcher
+from repro.obs import (ProfileWindow, TelemetryDrain, get_recorder, make_event,
+                       parse_profile_steps)
 from repro.train.checkpoints import CheckpointManager
 from repro.train.engine import TrainEngine
 from repro.train.fault_tolerance import PreemptionHandler, StepWatchdog
@@ -75,7 +77,13 @@ class Trainer:
                  replica_lrs: Optional[List[float]] = None,
                  replica_seeds: Optional[List[int]] = None,
                  nonfinite_guard: bool = False,
-                 step_budget_seconds: Optional[float] = None):
+                 step_budget_seconds: Optional[float] = None,
+                 telemetry: bool = False,
+                 recorder=None,
+                 obs_every: int = 1,
+                 profile_steps: Optional[str] = None,
+                 profile_dir: Optional[str] = None,
+                 emit_roofline: bool = False):
         self.optimizer = optimizer
         self.epochs = epochs
         self.patience = patience
@@ -89,6 +97,22 @@ class Trainer:
         self.handle_preemption = handle_preemption
         self.nonfinite_guard = nonfinite_guard
         self.step_budget_seconds = step_budget_seconds
+        # Observability (see repro.obs): `telemetry` turns on the engine's
+        # on-device per-step series; `recorder` pins a Recorder (default:
+        # the process-global one, resolved at use so a later
+        # obs.configure() still takes effect); `obs_every` rate-limits
+        # per-step metric events; `profile_steps` ("A:B") opens a
+        # jax.profiler window into `profile_dir` around those global
+        # steps; `emit_roofline` emits the chunk step's static HLO cost
+        # once per train() (one extra AOT compile).
+        self.telemetry = bool(telemetry)
+        self.recorder = recorder
+        self.obs_every = int(obs_every)
+        self.profile_steps = (parse_profile_steps(profile_steps)
+                              if isinstance(profile_steps, str)
+                              else profile_steps)
+        self.profile_dir = profile_dir
+        self.emit_roofline = bool(emit_roofline)
         self.chunk_batches = chunk_batches
         self.mesh = mesh
         self.sparse_tables = sparse_tables
@@ -111,13 +135,18 @@ class Trainer:
         # model being evaluated every epoch survives a >4-model sweep.
         self._eval_cache: Dict[Any, tuple] = {}
 
+    def _rec(self):
+        """The recorder events go to: the pinned one, else the global."""
+        return self.recorder if self.recorder is not None else get_recorder()
+
     def _make_engine(self, model) -> TrainEngine:
         return TrainEngine(model, self.optimizer,
                            chunk_batches=self.chunk_batches, mesh=self.mesh,
                            sparse_tables=self.sparse_tables,
                            sparse_table_kwargs=self.sparse_table_kwargs,
                            replicas=self.replicas,
-                           nonfinite_guard=self.nonfinite_guard)
+                           nonfinite_guard=self.nonfinite_guard,
+                           telemetry=self.telemetry)
 
     def _eval_update_fn(self, model, metrics, replicas=None):
         def eval_step(params, state, batch):
@@ -228,8 +257,15 @@ class Trainer:
             self.step_budget_seconds,
             on_violation=lambda step, sec: self.log_fn(
                 f"[trainer] watchdog: step ~{step} averaged {sec:.3f}s/step, "
-                f"over budget {self.step_budget_seconds}s"))
+                f"over budget {self.step_budget_seconds}s"),
+            recorder=self.recorder)
             if self.step_budget_seconds else None)
+        rec = self._rec()
+        profile = (ProfileWindow(*self.profile_steps,
+                                 log_dir=self.profile_dir or "profile",
+                                 recorder=self.recorder)
+                   if self.profile_steps else None)
+        roofline_pending = self.emit_roofline
         if R is None:
             best_val = float("inf")
             bad_epochs = 0
@@ -275,72 +311,48 @@ class Trainer:
         try:
             while state.epoch < self.epochs:
                 t0 = time.time()
-                n_batches = 0
-                train_loss = 0.0 if R is None else np.zeros(R, np.float64)
-                skipped_steps = 0 if R is None else np.zeros(R, np.int64)
+                # The epoch's single source of truth for loss/skip/batch
+                # accumulation AND per-step metric events: one TelemetryDrain,
+                # fed one device_get per chunk. The trainer no longer keeps
+                # its own parallel accumulators.
+                acc = TelemetryDrain(replicas=R, recorder=self.recorder,
+                                     every=self.obs_every, epoch=state.epoch)
                 wd_epoch_start = watchdog.violations if watchdog else 0
                 if resume_accum is not None:
                     # First epoch after a mid-epoch resume: start from the
                     # checkpointed accumulators so the epoch's recorded loss
                     # covers every batch, not just the post-crash ones.
-                    if R is None:
-                        train_loss = float(resume_accum["train_loss"])
-                        skipped_steps = int(resume_accum.get("skipped", 0))
-                    else:
-                        train_loss = np.asarray(resume_accum["train_loss"],
-                                                np.float64)
-                        skipped_steps = np.asarray(
-                            resume_accum.get("skipped", [0] * R), np.int64)
-                    n_batches = int(resume_accum["n_batches"])
+                    acc.load(resume_accum)
                     resume_accum = None
                 epoch_active = None if R is None else active.copy()
+                epoch_span = rec.span("epoch", epoch=state.epoch)
+                epoch_span.__enter__()
                 # One jit dispatch per chunk of up to `chunk_batches` steps; the
-                # previous chunk's on-device (n,) — or (n, R) — loss array is
+                # previous chunk's on-device (n,) — or (n, R) — loss payload is
                 # drained while the current chunk runs, so the host never blocks
                 # on the step it just dispatched. loader_state is the bit-exact
                 # resume point after the chunk's last batch (the loader itself
                 # has run ahead by the prefetch depth).
-                pending_losses = None
+                pending = None  # (payload, first global step of its chunk)
                 stop = False
-
-                def drain(payload):
-                    # With nonfinite_guard the engine's telemetry is a dict:
-                    # per-step losses plus a same-shaped skipped mask. A skipped
-                    # step's loss is the non-finite value that triggered the
-                    # skip — it must not poison the epoch mean, so it counts
-                    # into skipped_steps instead of train_loss.
-                    nonlocal train_loss, skipped_steps
-                    if isinstance(payload, dict):
-                        losses = payload["loss"]
-                        skipped = np.asarray(payload["skipped"])
-                    else:
-                        losses, skipped = payload, None
-                    if R is None:
-                        # Per-element accumulation into the python float keeps
-                        # the sum bit-identical to the historical one-
-                        # float(loss)-per-step loop (a vectorized f32 sum would
-                        # not).
-                        if skipped is None:
-                            for loss in np.asarray(losses):
-                                train_loss += float(loss)
-                        else:
-                            for loss, skip in zip(np.asarray(losses), skipped):
-                                if skip:
-                                    skipped_steps += 1
-                                else:
-                                    train_loss += float(loss)
-                    else:
-                        arr = np.asarray(losses, np.float64)
-                        if skipped is None:
-                            train_loss += arr.sum(axis=0)
-                        else:
-                            train_loss += np.where(skipped, 0.0, arr).sum(axis=0)
-                            skipped_steps += skipped.sum(axis=0)
 
                 chunk_t0 = time.time()
                 for chunk, loader_state, n in DevicePrefetcher(
                         train_loader, chunk_batches=engine.chunk_batches,
                         device=engine.batch_sharding()):
+                    if roofline_pending:
+                        # One extra AOT compile of the already-traced program;
+                        # emitted once, before the first dispatch donates the
+                        # argument buffers.
+                        roofline_pending = False
+                        with rec.span("roofline"):
+                            cost = engine.roofline(state.params,
+                                                   state.opt_state, chunk)
+                        rec.emit(make_event("roofline", "chunk_step",
+                                            data=cost,
+                                            step=state.global_step))
+                    if profile is not None:
+                        profile.before_chunk(state.global_step)
                     if R is None:
                         state.params, state.opt_state, losses = engine.step(
                             state.params, state.opt_state, chunk)
@@ -348,12 +360,13 @@ class Trainer:
                         state.params, state.opt_state, losses = engine.step(
                             state.params, state.opt_state, chunk,
                             active=epoch_active)
-                    if pending_losses is not None:
-                        drain(pending_losses)
-                    pending_losses = losses
-                    n_batches += n
+                    if pending is not None:
+                        acc.drain(*pending)
+                    pending = (losses, state.global_step)
                     prev_step = state.global_step
                     state.global_step += n
+                    if profile is not None:
+                        profile.after_chunk(state.global_step)
                     if watchdog is not None:
                         now = time.time()
                         watchdog.check((now - chunk_t0) / max(n, 1),
@@ -368,12 +381,12 @@ class Trainer:
                         # exactly the batches its loader cursor has passed:
                         # drain the in-flight chunk before snapshotting (the
                         # one host sync a checkpoint costs).
-                        drain(pending_losses)
-                        pending_losses = None
-                        self._save(state, train_loader, loader_state,
-                                   epoch_accum=self._accum_aux(
-                                       R, train_loss, n_batches, skipped_steps),
-                                   history=history)
+                        acc.drain(*pending)
+                        pending = None
+                        with rec.span("checkpoint", step=state.global_step):
+                            self._save(state, train_loader, loader_state,
+                                       epoch_accum=acc.aux(),
+                                       history=history)
                     if preempted:
                         if self.ckpt:
                             self.log_fn("[trainer] preempted; checkpoint written")
@@ -382,20 +395,23 @@ class Trainer:
                                         "configured — stopping without saving")
                         stop = True
                         break
-                if pending_losses is not None:
-                    drain(pending_losses)
+                if pending is not None:
+                    acc.drain(*pending)
                 if stop:
                     # preempted: leave _final_state usable (test() after a
                     # preempted train must not crash) and hand back history
+                    epoch_span.__exit__(None, None, None)
+                    if profile is not None:
+                        profile.close(state.global_step)
                     self._final_state = state
                     return history
+                epoch_span.__exit__(None, None, None)
                 state.epoch += 1
+                n_batches, skipped_steps = acc.n_batches, acc.skipped_steps
                 # Skipped (non-finite) steps contributed no loss; the mean is
-                # over the steps that actually updated. Guard off → skipped is
-                # identically zero and this is the historical denominator.
-                denom = (max(n_batches - skipped_steps, 1) if R is None
-                         else np.maximum(n_batches - skipped_steps, 1))
-                mean_loss = train_loss / denom
+                # over the steps that actually updated (TelemetryDrain holds
+                # the exact-round-trip python-float sum).
+                mean_loss = acc.mean_loss()
                 record = {
                     "epoch": state.epoch,
                     "train_loss": (mean_loss if R is None else mean_loss.tolist()),
@@ -411,8 +427,9 @@ class Trainer:
                 if R is not None:
                     record["active"] = epoch_active.tolist()
                 if val_loader is not None:
-                    val = self.evaluate(model, state.params, val_loader,
-                                        replicas=R)
+                    with rec.span("eval", epoch=state.epoch):
+                        val = self.evaluate(model, state.params, val_loader,
+                                            replicas=R)
                     record.update({f"val_{k}": v for k, v in val.items()})
                     if R is None:
                         val_loss = -val["ll"]
@@ -431,6 +448,17 @@ class Trainer:
                                               bad_epochs + active.astype(int))
                 history.append(record)
                 self.log_fn(f"[trainer] {record}")
+                if rec.enabled:
+                    # The full epoch record as one structured event, plus the
+                    # counter snapshot and process stats — the per-epoch
+                    # heartbeat a dashboard tails.
+                    rec.emit(make_event("epoch", "epoch_record", data=record,
+                                        epoch=state.epoch - 1,
+                                        step=state.global_step))
+                    rec.flush_counters(epoch=state.epoch - 1,
+                                       step=state.global_step)
+                    rec.process_stats(epoch=state.epoch - 1,
+                                      step=state.global_step)
                 # Resolve stopping BEFORE the end-of-epoch checkpoint so the
                 # saved early-stop state (incl. the updated active mask) is the
                 # one the next epoch would train under.
@@ -452,7 +480,8 @@ class Trainer:
                 if self.ckpt:
                     # End-of-epoch: loader cursor is at the next epoch's start,
                     # so the saved accumulators are a fresh epoch's (None).
-                    self._save(state, train_loader, history=history)
+                    with rec.span("checkpoint", step=state.global_step):
+                        self._save(state, train_loader, history=history)
                 if stop_now:
                     self.log_fn(f"[trainer] early stop at epoch {state.epoch}"
                                 if R is None else
@@ -462,6 +491,10 @@ class Trainer:
             self._final_state = state
             return history
         finally:
+            if profile is not None:
+                # idempotent: a window still open past the last trained step
+                # (or an exception inside it) is flushed here
+                profile.close(state.global_step)
             if preempt is not None:
                 preempt.restore()
 
@@ -551,18 +584,6 @@ class Trainer:
                              replicas=replicas)
 
     # -- internals -------------------------------------------------------------------
-    @staticmethod
-    def _accum_aux(R, train_loss, n_batches, skipped_steps):
-        """JSON-able mid-epoch loss accumulators for checkpoint aux. Python
-        floats round-trip json exactly (repr-based), so a resumed epoch's
-        loss sum stays bit-identical to an uninterrupted run's."""
-        if R is None:
-            return {"train_loss": train_loss, "n_batches": int(n_batches),
-                    "skipped": int(skipped_steps)}
-        return {"train_loss": np.asarray(train_loss, np.float64).tolist(),
-                "n_batches": int(n_batches),
-                "skipped": np.asarray(skipped_steps).tolist()}
-
     def _save(self, state: TrainState, loader, loader_state=None,
               epoch_accum=None, history=None):
         if loader_state is None:
