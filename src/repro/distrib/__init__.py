@@ -10,6 +10,10 @@ from repro.distrib.shardings import (
 from repro.distrib.compression import (
     quantize_int8,
     dequantize_int8,
+    quantize_tree,
+    dequantize_tree,
+    tree_nbytes,
+    QuantizedTensor,
     CompressedAllReduce,
 )
 from repro.distrib.collectives import (
@@ -26,6 +30,10 @@ __all__ = [
     "MODEL_AXIS",
     "quantize_int8",
     "dequantize_int8",
+    "quantize_tree",
+    "dequantize_tree",
+    "tree_nbytes",
+    "QuantizedTensor",
     "CompressedAllReduce",
     "sharded_embedding_lookup",
     "masked_psum_lookup",

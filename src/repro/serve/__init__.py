@@ -1,0 +1,52 @@
+"""``repro.serve`` — the resilient serving engine.
+
+A bounded admission queue with load shedding and backpressure, a
+deadline-aware dynamic batcher over pre-compiled bucket shapes, a warm
+multi-model registry with an int8-quantized degraded tier and a constant
+CTR-prior fallback, per-model circuit breakers, fail-closed per-request
+validation, and SIGTERM drain. See README "Serving".
+"""
+from repro.serve.batcher import BatchPlan, DeadlineBatcher
+from repro.serve.breaker import (CLOSED, HALF_OPEN, OPEN, CircuitBreaker,
+                                 DegradationLadder)
+from repro.serve.clock import ServiceModel, VirtualClock, WallClock
+from repro.serve.engine import ServeEngine
+from repro.serve.queue import (ADMIT, ADMIT_BACKPRESSURE, AdmissionQueue,
+                               SHED_OVERLOAD, SHED_QUEUE_FULL)
+from repro.serve.registry import (DEFAULT_BUCKETS, ModelEntry, ModelRegistry,
+                                  pad_batch)
+from repro.serve.request import (OK, REJECTED, SHED, TIERS, ServeRequest,
+                                 ServeResult, make_request, poisson_trace)
+from repro.serve.validation import validate_request
+
+__all__ = [
+    "ServeEngine",
+    "ServeRequest",
+    "ServeResult",
+    "make_request",
+    "poisson_trace",
+    "validate_request",
+    "AdmissionQueue",
+    "DeadlineBatcher",
+    "BatchPlan",
+    "CircuitBreaker",
+    "DegradationLadder",
+    "ModelRegistry",
+    "ModelEntry",
+    "pad_batch",
+    "ServiceModel",
+    "VirtualClock",
+    "WallClock",
+    "TIERS",
+    "OK",
+    "REJECTED",
+    "SHED",
+    "ADMIT",
+    "ADMIT_BACKPRESSURE",
+    "SHED_OVERLOAD",
+    "SHED_QUEUE_FULL",
+    "CLOSED",
+    "OPEN",
+    "HALF_OPEN",
+    "DEFAULT_BUCKETS",
+]

@@ -4,8 +4,10 @@ conformance harness (repro.testing.conformance)."""
 from repro.testing.conformance import (KERNEL_SPECS, SPECS_BY_NAME,
                                        KernelSpec, check_extreme, check_grads,
                                        check_value, run_conformance)
-from repro.testing.faults import (FlakyShardReads, KillSwitch,
-                                  NonFiniteBatchInjector, corrupt_shard_file,
+from repro.testing.faults import (POISON_MODES, FlakyShardReads, KillSwitch,
+                                  NonFiniteBatchInjector, PoisonTrace,
+                                  ServeFault, ServeKillSwitch, SlowModel,
+                                  corrupt_shard_file, poison_request,
                                   truncate_tail)
 
 __all__ = [
@@ -14,6 +16,12 @@ __all__ = [
     "NonFiniteBatchInjector",
     "FlakyShardReads",
     "KillSwitch",
+    "ServeFault",
+    "SlowModel",
+    "ServeKillSwitch",
+    "poison_request",
+    "PoisonTrace",
+    "POISON_MODES",
     "KernelSpec",
     "KERNEL_SPECS",
     "SPECS_BY_NAME",

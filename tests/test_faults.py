@@ -489,3 +489,42 @@ def test_sigkill_and_resume_is_bit_exact(tmp_path, small_log):
     assert attempts == 2  # died exactly once, then completed
     assert killed["digest"] == clean["digest"]  # params bit-for-bit
     assert killed["history"] == clean["history"]  # incl. mid-epoch losses
+
+
+# -- caller-armed kill gate & flaky-read latency -------------------------------
+def test_killswitch_caller_armed_gate(small_log):
+    """A disarmed KillSwitch is inert through any number of batches; after
+    arm() it fires exactly once at the pinned batch index. SIGTERM is
+    absorbed by a PreemptionHandler so the gate is testable in-process."""
+    cfg, data = small_log
+    ks = KillSwitch(ClickLogLoader(data, batch_size=64, seed=5),
+                    after_batches=0, sig=signal.SIGTERM, armed=False)
+    with PreemptionHandler() as h:
+        for _ in ks:
+            pass
+        assert not ks.fired and not h.should_stop
+        ks.arm()
+        ks.produced = 0
+        next(iter(ks))
+        assert ks.fired and h.should_stop
+        # fire-once: replaying the pinned batch does not re-signal
+        h.should_stop = False
+        ks.produced = 0
+        next(iter(ks))
+        assert not h.should_stop
+
+
+def test_flaky_reads_delay_seconds(store_dir):
+    """FlakyShardReads charges its configured latency on the failing calls
+    (slow remote filesystem), then passes through at full speed."""
+    flaky = FlakyShardReads(SessionStore(store_dir), fail_times=2,
+                            delay_seconds=0.05)
+    t0 = time.perf_counter()
+    for _ in range(2):
+        with pytest.raises(OSError):
+            flaky.open_shard(0)
+    elapsed = time.perf_counter() - t0
+    assert elapsed >= 0.1  # two delayed failures
+    shard = flaky.open_shard(0)  # third call passes through
+    assert shard is not None
+    assert flaky.failures == 2 and flaky.calls == 3
