@@ -1,18 +1,28 @@
-"""Ingest + streaming throughput for the out-of-core session store.
+"""Data-plane benchmark: parallel ingest, compression, streaming, training.
 
 Measures, for a synthetic DBN log of --sessions sessions:
 
-  * **ingest** — chunked generation (``iter_click_log_chunks``, chunk size
-    --chunk < sessions/10 by default) streamed through a
-    ``SessionStoreWriter``: sessions/s and the peak chunk size actually held
-    (the memory-bounded guarantee: peak rows in flight is O(chunk + shard),
-    independent of the log size).
-  * **stream** — one full epoch through ``StreamingClickLogLoader``
-    (shuffled, with and without the background read-ahead thread) vs one
-    epoch through the in-memory ``ClickLogLoader`` on the same data:
-    sessions/s of pure host-side batch production.
+  * **ingest** — ``ingest_synthetic`` (codec=auto) at 1/2/4 worker
+    processes: wall seconds, sessions/s, and speedup vs serial. The
+    worker counts are byte-identical by construction (pinned in
+    tests/test_ingest.py); this section reports only speed. On boxes with
+    fewer cores than workers the speedup honestly reads < 1 — spawn +
+    per-worker import overhead with no parallel hardware to amortize it.
+  * **codec** — the same log stored ``raw`` (v1 bytes) vs ``auto``
+    (bitpack/zlib per column): on-disk bytes per column and overall, plus
+    one-epoch streaming read throughput from each store (decode cost vs
+    byte-volume saved).
+  * **stream** — host-side batch production from the raw store: in-memory
+    ``ClickLogLoader`` vs ``StreamingClickLogLoader`` (sync + read-ahead),
+    best-of --reps.
+  * **train** — steps/s of a PBM ``Trainer`` (scan-jitted chunks +
+    overlapped device prefetch) fed by the in-memory loader vs the
+    streaming loader over the compressed store. Interleaved A/B pairs,
+    two epochs per run, scored on warm epochs only (epoch 0 carries the
+    jit compile) — ``stream_train_vs_memory_train`` is the headline
+    number CI gates at >= 0.95.
 
-Writes BENCH_store.json next to this file (or --out) so the input-pipeline
+Writes BENCH_store.json next to this file (or --out) so the data-plane
 throughput trajectory is recorded per PR.
 
 Run: PYTHONPATH=src python benchmarks/bench_store.py [--sessions 200000]
@@ -32,34 +42,35 @@ import numpy as np
 # Allow running without PYTHONPATH=src.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.data import (ClickLogLoader, SessionStore, SessionStoreWriter,  # noqa: E402
+from repro.data import (ClickLogLoader, SessionStore,  # noqa: E402
                         StreamingClickLogLoader, SyntheticConfig,
-                        iter_click_log_chunks)
+                        ingest_synthetic)
 
 
-def bench_ingest(cfg, store_dir, chunk_sessions, shard_rows):
-    peak_chunk_rows = 0
-    t0 = time.perf_counter()
-    with SessionStoreWriter(store_dir, shard_rows=shard_rows,
-                            metadata={"bench": True}) as writer:
-        for chunk in iter_click_log_chunks(cfg, chunk_sessions):
-            peak_chunk_rows = max(peak_chunk_rows, chunk["clicks"].shape[0])
-            writer.append(chunk)
-    seconds = time.perf_counter() - t0
-    assert peak_chunk_rows * 10 < max(cfg.n_sessions, 10), (
-        f"peak chunk {peak_chunk_rows} rows is not < 1/10 of "
-        f"{cfg.n_sessions} — not an out-of-core ingest")
-    store = SessionStore(store_dir)
-    assert store.rows == cfg.n_sessions
-    return {
-        "seconds": seconds,
-        "sessions_per_s": cfg.n_sessions / seconds,
-        "peak_chunk_rows": peak_chunk_rows,
-        "shards": store.n_shards,
-        "bytes": sum(
-            os.path.getsize(os.path.join(dp, f))
-            for dp, _, fs in os.walk(store_dir) for f in fs),
-    }, store
+def bench_ingest_scaling(cfg, tmp, chunk, shard_rows, worker_counts):
+    per_worker = {}
+    stores = {}
+    for w in worker_counts:
+        d = os.path.join(tmp, f"ingest_w{w}")
+        t0 = time.perf_counter()
+        store = ingest_synthetic(cfg, d, chunk_sessions=chunk,
+                                 shard_rows=shard_rows, codec="auto",
+                                 workers=w)[""]
+        sec = time.perf_counter() - t0
+        assert store.rows == cfg.n_sessions
+        per_worker[str(w)] = {"seconds": sec,
+                              "sessions_per_s": cfg.n_sessions / sec}
+        stores[w] = store
+        print(f"[ingest] workers={w}: {cfg.n_sessions} sessions in "
+              f"{sec:.2f}s ({cfg.n_sessions / sec:.0f}/s)")
+    base = per_worker[str(worker_counts[0])]["seconds"]
+    result = {
+        "workers": per_worker,
+        "shards": stores[worker_counts[0]].n_shards,
+        "speedups": {str(w): base / per_worker[str(w)]["seconds"]
+                     for w in worker_counts},
+    }
+    return result, stores[worker_counts[0]]
 
 
 def drain(loader):
@@ -82,6 +93,97 @@ def best_of(make_loader, reps):
     return batches, best
 
 
+def bench_codec(cfg, tmp, chunk, shard_rows, auto_store, batch, reps):
+    t0 = time.perf_counter()
+    raw_store = ingest_synthetic(cfg, os.path.join(tmp, "ingest_raw"),
+                                 chunk_sessions=chunk, shard_rows=shard_rows,
+                                 codec="raw", workers=1)[""]
+    raw_seconds = time.perf_counter() - t0
+    columns = {}
+    for col in raw_store.columns:
+        r = raw_store.stored_nbytes([col])
+        a = auto_store.stored_nbytes([col])
+        columns[col] = {"raw": r, "auto": a, "ratio": a / r,
+                        "codec": auto_store.shard_codec(0, col)}
+    read = {}
+    for name, store in (("raw", raw_store), ("auto", auto_store)):
+        batches, sec = best_of(
+            lambda: StreamingClickLogLoader(store, batch_size=batch, seed=0,
+                                            read_ahead=2), reps)
+        read[name] = {"seconds": sec,
+                      "sessions_per_s": batches * batch / sec}
+    result = {
+        "raw_bytes": raw_store.stored_nbytes(),
+        "auto_bytes": auto_store.stored_nbytes(),
+        "ratio": auto_store.stored_nbytes() / raw_store.stored_nbytes(),
+        "raw_ingest_seconds": raw_seconds,
+        "columns": columns,
+        "read": read,
+        "read_auto_vs_raw": (read["auto"]["sessions_per_s"]
+                             / read["raw"]["sessions_per_s"]),
+    }
+    print(f"[codec] auto/raw bytes {result['ratio']:.3f}x "
+          f"({result['auto_bytes'] / 1e6:.1f} / "
+          f"{result['raw_bytes'] / 1e6:.1f} MB), read throughput "
+          f"{result['read_auto_vs_raw']:.2f}x of raw")
+    return result, raw_store
+
+
+def bench_stream(data, raw_store, batch, reps):
+    variants = {
+        "in_memory": lambda: ClickLogLoader(data, batch_size=batch, seed=0),
+        "stream_read_ahead": lambda: StreamingClickLogLoader(
+            raw_store, batch_size=batch, seed=0, read_ahead=2),
+        "stream_sync": lambda: StreamingClickLogLoader(
+            raw_store, batch_size=batch, seed=0, read_ahead=0),
+    }
+    stream = {}
+    for name, make in variants.items():
+        batches, sec = best_of(make, reps)
+        stream[name] = {"seconds": sec,
+                        "sessions_per_s": batches * batch / sec,
+                        "batches": batches}
+        print(f"[stream] {name:18s} {sec:.2f}s "
+              f"({stream[name]['sessions_per_s']:.0f} sessions/s)")
+    return stream
+
+
+def bench_train(cfg, data, auto_store, batch, reps):
+    """Interleaved A/B: each rep trains two epochs per variant and keeps
+    the fastest *warm* epoch (epoch 0 pays the jit compile)."""
+    from repro import optim
+    from repro.core import PositionBasedModel
+    from repro.train import Trainer
+
+    model = PositionBasedModel(query_doc_pairs=cfg.n_query_doc_pairs,
+                               positions=cfg.positions)
+
+    def warm_epoch_seconds(loader):
+        steps = loader.batches_per_epoch
+        trainer = Trainer(optim.adamw(0.02), epochs=2, patience=100,
+                          chunk_batches=8, log_fn=lambda *_: None)
+        history = trainer.train(model, loader)
+        return steps, min(r["seconds"] for r in history[1:])
+
+    best = {"in_memory": float("inf"), "streaming": float("inf")}
+    steps = {}
+    for _ in range(reps):
+        steps["in_memory"], sec = warm_epoch_seconds(
+            ClickLogLoader(data, batch_size=batch, seed=0))
+        best["in_memory"] = min(best["in_memory"], sec)
+        steps["streaming"], sec = warm_epoch_seconds(
+            StreamingClickLogLoader(auto_store, batch_size=batch, seed=0))
+        best["streaming"] = min(best["streaming"], sec)
+    train = {name: {"seconds": best[name],
+                    "steps": steps[name],
+                    "steps_per_s": steps[name] / best[name]}
+             for name in best}
+    for name, r in train.items():
+        print(f"[train] {name:10s} {r['seconds']:.2f}s/epoch "
+              f"({r['steps_per_s']:.1f} steps/s)")
+    return train
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--sessions", type=int, default=200_000)
@@ -90,7 +192,10 @@ def main():
     ap.add_argument("--shard-rows", type=int, default=None,
                     help="rows per shard (default sessions/8)")
     ap.add_argument("--batch", type=int, default=4096)
+    ap.add_argument("--train-batch", type=int, default=1024)
     ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--train-reps", type=int, default=2)
+    ap.add_argument("--workers", type=int, nargs="+", default=[1, 2, 4])
     ap.add_argument("--out", default=os.path.join(os.path.dirname(__file__),
                                                   "BENCH_store.json"))
     args = ap.parse_args()
@@ -104,46 +209,39 @@ def main():
 
     tmp = tempfile.mkdtemp(prefix="bench_store_")
     try:
-        store_dir = os.path.join(tmp, "store")
-        ingest, store = bench_ingest(cfg, store_dir, chunk, shard_rows)
-        print(f"[ingest] {args.sessions} sessions in {ingest['seconds']:.2f}s "
-              f"({ingest['sessions_per_s']:.0f}/s), peak chunk "
-              f"{ingest['peak_chunk_rows']} rows, {ingest['shards']} shards, "
-              f"{ingest['bytes'] / 1e6:.1f} MB")
-
-        data = store.read_all(columns=("positions", "query_doc_ids", "clicks",
-                                       "mask"))
-        variants = {
-            "in_memory": lambda: ClickLogLoader(
-                data, batch_size=args.batch, seed=0),
-            "stream_read_ahead": lambda: StreamingClickLogLoader(
-                store, batch_size=args.batch, seed=0, read_ahead=2),
-            "stream_sync": lambda: StreamingClickLogLoader(
-                store, batch_size=args.batch, seed=0, read_ahead=0),
-        }
-        stream = {}
-        for name, make in variants.items():
-            batches, sec = best_of(make, args.reps)
-            stream[name] = {"seconds": sec,
-                            "sessions_per_s": batches * args.batch / sec,
-                            "batches": batches}
-            print(f"[stream] {name:18s} {sec:.2f}s "
-                  f"({stream[name]['sessions_per_s']:.0f} sessions/s)")
+        ingest, auto_store = bench_ingest_scaling(cfg, tmp, chunk, shard_rows,
+                                                  args.workers)
+        codec, raw_store = bench_codec(cfg, tmp, chunk, shard_rows,
+                                       auto_store, args.batch, args.reps)
+        data = raw_store.read_all(columns=("positions", "query_doc_ids",
+                                           "clicks", "mask"))
+        stream = bench_stream(data, raw_store, args.batch, args.reps)
+        train = bench_train(cfg, data, auto_store, args.train_batch,
+                            args.train_reps)
 
         result = {
             "sessions": args.sessions,
             "chunk_sessions": chunk,
             "shard_rows": shard_rows,
             "batch": args.batch,
+            "train_batch": args.train_batch,
+            "cpu_count": os.cpu_count(),
             "ingest": ingest,
+            "codec": codec,
             "stream": stream,
+            "train": train,
             "stream_vs_memory": (stream["stream_read_ahead"]["sessions_per_s"]
                                  / stream["in_memory"]["sessions_per_s"]),
+            "stream_train_vs_memory_train": (
+                train["streaming"]["steps_per_s"]
+                / train["in_memory"]["steps_per_s"]),
         }
         with open(args.out, "w") as f:
             json.dump(result, f, indent=1)
-        print(f"[bench_store] wrote {args.out} (stream/in-memory throughput "
-              f"ratio {result['stream_vs_memory']:.2f}x)")
+        print(f"[bench_store] wrote {args.out} "
+              f"(stream-train/memory-train steps/s ratio "
+              f"{result['stream_train_vs_memory_train']:.2f}x, "
+              f"compressed {result['codec']['ratio']:.3f}x of raw bytes)")
     finally:
         shutil.rmtree(tmp, ignore_errors=True)
 

@@ -2,16 +2,20 @@
 and sharded, resumable in-memory + streaming loading."""
 from repro.data.loader import ClickLogLoader, DevicePrefetcher, split_sessions
 from repro.data.store import (SessionStore, SessionStoreWriter,
-                              ShardCorruptionError, ingest_synthetic,
-                              write_session_store)
+                              ShardCorruptionError, write_session_store)
+# the package-level ingest_synthetic is the worker-aware entrypoint
+# (workers=1 == the serial reference implementation in repro.data.store)
+from repro.data.ingest import ingest_chunks, ingest_synthetic
 from repro.data.streaming import StreamingClickLogLoader, StreamingLoaderState
 from repro.data.synthetic import (SyntheticConfig, generate_click_log,
-                                  iter_click_log_chunks, make_features)
+                                  iter_click_log_chunks, make_features,
+                                  synthesize_chunk)
 
 __all__ = [
     "SyntheticConfig",
     "generate_click_log",
     "iter_click_log_chunks",
+    "synthesize_chunk",
     "make_features",
     "ClickLogLoader",
     "DevicePrefetcher",
@@ -21,6 +25,7 @@ __all__ = [
     "ShardCorruptionError",
     "write_session_store",
     "ingest_synthetic",
+    "ingest_chunks",
     "StreamingClickLogLoader",
     "StreamingLoaderState",
 ]

@@ -10,6 +10,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import threading
 from typing import Dict, Iterator, Optional, Tuple
 
 import numpy as np
@@ -119,6 +120,21 @@ class DevicePrefetcher:
     asynchronously dispatched step on batch i — the train loop never blocks
     on input, and the per-batch ``jnp.asarray`` re-wrap disappears.
 
+    With ``overlap=True`` (default) the whole host side — pulling loader
+    batches (which drains the streaming loader's read-ahead queue, i.e.
+    shard decompress + window assembly), chunk stacking, and
+    ``jax.device_put`` — runs in a dedicated staging thread feeding a
+    bounded queue of device-resident items. The consumer then only pops
+    finished device buffers: the H2D copy of chunk k+1 genuinely overlaps
+    the dispatched scan over chunk k instead of running between dispatches.
+    Item order, payloads, and the recorded resume states are identical to
+    ``overlap=False`` (single producer, FIFO queue) — bit-exact mid-epoch
+    checkpoint/resume is preserved, and a staging-thread exception (e.g.
+    ``ShardCorruptionError`` from a fail-closed reader) re-raises on the
+    consumer with its original traceback. Abandoning the iterator mid-epoch
+    closes the staging thread, which in turn closes the loader's epoch
+    generator *from the thread that was consuming it*.
+
     Iterating yields ``(device_batch, loader_state)`` pairs. ``loader_state``
     is the loader's resume point recorded *when that batch was produced*;
     mid-epoch checkpoints must save it (not ``loader.state_dict()``, which has
@@ -143,7 +159,7 @@ class DevicePrefetcher:
     """
 
     def __init__(self, loader, size: int = 2, device=None,
-                 chunk_batches: Optional[int] = None):
+                 chunk_batches: Optional[int] = None, overlap: bool = True):
         if size < 1:
             raise ValueError(f"prefetch size must be >= 1, got {size}")
         if chunk_batches is not None and chunk_batches < 1:
@@ -160,6 +176,7 @@ class DevicePrefetcher:
         self.size = size
         self.device = device
         self.chunk_batches = chunk_batches
+        self.overlap = overlap
 
     def _put(self, batch):
         import jax
@@ -167,54 +184,31 @@ class DevicePrefetcher:
         device = self.device(batch) if callable(self.device) else self.device
         return {k: jax.device_put(v, device) for k, v in batch.items()}
 
-    def _pump(self, pull, queue):
-        """Prime ``size`` items, then refill one ahead of each yield so the
-        host work behind ``pull`` overlaps the consumer's compute."""
-        for _ in range(self.size):
-            pull()
-        while queue:
-            item = queue.popleft()
-            pull()  # refill before handing control back to compute
-            yield item
-
-    def __iter__(self):
-        if self.chunk_batches is not None:
-            yield from self._iter_chunks()
+    # -- host-side item stream (shared by both execution modes) ----------------
+    def _items(self):
+        """Generator of finished queue items: loader pull + (chunk stack) +
+        ``device_put`` + resume-state capture. Everything host-side lives
+        here, so whichever thread iterates it does all the staging work.
+        The loader's epoch iterator is created on first next() — in overlap
+        mode that is the staging thread, which therefore also owns closing
+        it (a generator must be closed from the thread executing it)."""
+        it = iter(self.loader)
+        get_state = getattr(self.loader, "state_dict", lambda: None)
+        if self.chunk_batches is None:
+            for batch in it:
+                yield (self._put(batch), get_state())
             return
-        queue = collections.deque()
-        it = iter(self.loader)
-        get_state = getattr(self.loader, "state_dict", lambda: None)
-
-        def pull():
-            try:
-                batch = next(it)
-            except StopIteration:
-                return
-            queue.append((self._put(batch), get_state()))
-
-        yield from self._pump(pull, queue)
-
-    def _iter_chunks(self):
-        queue = collections.deque()
-        it = iter(self.loader)
-        get_state = getattr(self.loader, "state_dict", lambda: None)
         pushback = []  # one-batch lookahead for the shape-change flush
-
-        def next_host():
-            if pushback:
-                return pushback.pop()
-            try:
-                batch = next(it)
-            except StopIteration:
-                return None
-            return batch, get_state()
-
-        def pull():
+        while True:
             batches, state, sig = [], None, None
             while len(batches) < self.chunk_batches:
-                item = next_host()
-                if item is None:
-                    break
+                if pushback:
+                    item = pushback.pop()
+                else:
+                    try:
+                        item = (next(it), get_state())
+                    except StopIteration:
+                        break
                 batch, s = item
                 bsig = {k: (v.shape, v.dtype) for k, v in batch.items()}
                 if sig is not None and bsig != sig:
@@ -227,6 +221,81 @@ class DevicePrefetcher:
                 return
             chunk = {k: np.stack([b[k] for b in batches])
                      for k in batches[0]}
-            queue.append((self._put(chunk), state, len(batches)))
+            yield (self._put(chunk), state, len(batches))
 
-        yield from self._pump(pull, queue)
+    # -- execution modes -------------------------------------------------------
+    def _pump(self, items):
+        """Inline mode: prime ``size`` items, then refill one ahead of each
+        yield, all on the consumer thread (``overlap=False``)."""
+        queue = collections.deque()
+        try:
+            for item in items:
+                queue.append(item)
+                if len(queue) >= self.size:
+                    break
+            while queue:
+                nxt = next(items, None)
+                if nxt is not None:  # refill before handing back to compute
+                    queue.append(nxt)
+                yield queue.popleft()
+        finally:
+            items.close()
+
+    def _staged(self, items):
+        """Overlap mode: run the item stream in a staging thread feeding a
+        bounded queue; the consumer only pops device-resident items."""
+        import queue as queue_mod
+
+        q: queue_mod.Queue = queue_mod.Queue(maxsize=self.size)
+        stop = threading.Event()
+        done = object()
+        fail = []  # [exception] — surfaced on the consumer
+
+        def send(item) -> bool:
+            while not stop.is_set():
+                try:
+                    q.put(item, timeout=0.1)
+                    return True
+                except queue_mod.Full:
+                    continue
+            return False
+
+        def run():
+            try:
+                for item in items:
+                    if not send(item):
+                        return
+                send(done)
+            except BaseException as e:
+                fail.append(e)
+                send(done)
+            finally:
+                # consumed here => closed here; for a streaming loader this
+                # unwinds its epoch generator's finally (read-ahead shutdown)
+                items.close()
+
+        thread = threading.Thread(target=run, daemon=True,
+                                  name="device-prefetch")
+        thread.start()
+        try:
+            while True:
+                try:
+                    item = q.get(timeout=0.2)
+                except queue_mod.Empty:
+                    if not thread.is_alive() and q.empty() and not fail:
+                        return  # crashed harder than except: nothing to raise
+                    continue
+                if item is done:
+                    if fail:
+                        raise fail[0]  # original traceback intact
+                    return
+                yield item
+        finally:
+            stop.set()
+            thread.join(timeout=10.0)
+
+    def __iter__(self):
+        if self.overlap:
+            yield from self._staged(self._items())
+        else:
+            yield from self._pump(self._items())

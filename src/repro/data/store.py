@@ -27,11 +27,20 @@ Design points:
 - **Crash-safe.** The manifest is written last via ``os.replace``; a
   directory without a committed manifest is not a store, so a crashed ingest
   can never be half-read.
+- **Per-column compression (format v2).** Each shard entry records a codec
+  per column (see :mod:`repro.data.codecs`); ``codec="auto"`` at write time
+  picks ``bitpack`` for 0/1 columns (clicks, mask), ``zlib`` where DEFLATE
+  pays, and ``raw`` otherwise. Checksums and size checks cover the *stored*
+  bytes, so corruption fails closed on compressed columns exactly as on raw
+  ones. ``raw`` columns keep the zero-copy ``np.memmap`` read path, and v1
+  manifests (no codec field) read as all-``raw`` — byte-compatible.
 
 ``ingest_synthetic`` streams a :class:`repro.data.synthetic.SyntheticConfig`
 log through :func:`repro.data.synthetic.iter_click_log_chunks` straight into
 writers — optionally split into train/val/test stores — so logs far larger
-than RAM are synthesized with peak memory O(chunk + shard).
+than RAM are synthesized with peak memory O(chunk + shard). For multi-process
+ingest over the same deterministic chunk stream see
+:mod:`repro.data.ingest`.
 """
 from __future__ import annotations
 
@@ -43,8 +52,17 @@ from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.data import codecs as _codecs
+
 MANIFEST_NAME = "manifest.json"
-FORMAT_VERSION = 1
+FORMAT_VERSION = 2
+#: Manifest versions this reader accepts. v1 lacks per-column codec fields
+#: (every column is implicitly ``raw``); v2 shard entries add ``codecs`` and
+#: ``nbytes`` maps. v1 stores written by older builds stay readable forever.
+READABLE_FORMAT_VERSIONS = (1, 2)
+#: Writer-side codec modes: ``"raw"`` pins every column to raw bytes (v1
+#: byte-compatible, memmap reads); ``"auto"`` picks per column per shard.
+WRITER_CODECS = ("raw", "auto")
 
 
 class ShardCorruptionError(ValueError):
@@ -60,6 +78,44 @@ def _shard_dirname(index: int) -> str:
 
 def _crc32(arr: np.ndarray) -> str:
     return f"{zlib.crc32(np.ascontiguousarray(arr).view(np.uint8).reshape(-1)):08x}"
+
+
+def _crc32_bytes(data: bytes) -> str:
+    return f"{zlib.crc32(data):08x}"
+
+
+def _write_shard_dir(directory: str, name: str, shard: Mapping[str, np.ndarray],
+                     rows: int, codec: str) -> Dict:
+    """Encode and write one shard's column files; return its manifest entry.
+
+    The single place shard bytes are produced — shared by
+    :class:`SessionStoreWriter` and the parallel-ingest workers
+    (:mod:`repro.data.ingest`), so both paths emit byte-identical files and
+    entries for the same rows. ``codec`` is a writer mode from
+    :data:`WRITER_CODECS`; the per-column choice under ``"auto"`` is
+    deterministic in the column values (see ``codecs.encode_auto``).
+    """
+    os.makedirs(directory, exist_ok=True)
+    checksums, col_codecs, nbytes = {}, {}, {}
+    for cname, arr in shard.items():
+        arr = np.ascontiguousarray(arr)
+        path = os.path.join(directory, f"{cname}.bin")
+        chosen, stored = ("raw", None) if codec == "raw" \
+            else _codecs.encode_auto(arr)
+        if chosen == "raw":
+            # tofile streams the buffer — no bytes copy; crc over the array
+            # view IS the crc over the stored bytes for the raw codec.
+            arr.tofile(path)
+            checksums[cname] = _crc32(arr)
+            nbytes[cname] = int(arr.nbytes)
+        else:
+            with open(path, "wb") as f:
+                f.write(stored)
+            checksums[cname] = _crc32_bytes(stored)
+            nbytes[cname] = len(stored)
+        col_codecs[cname] = chosen
+    return {"name": name, "rows": int(rows), "checksums": checksums,
+            "codecs": col_codecs, "nbytes": nbytes}
 
 
 def _take_rows(parts: List[Dict[str, np.ndarray]], n: int
@@ -130,11 +186,15 @@ class SessionStoreWriter:
 
     def __init__(self, directory: str, shard_rows: int = 1_000_000,
                  columns: Optional[Sequence[str]] = None,
-                 metadata: Optional[Mapping] = None):
+                 metadata: Optional[Mapping] = None, codec: str = "raw"):
         if shard_rows < 1:
             raise ValueError(f"shard_rows must be >= 1, got {shard_rows}")
+        if codec not in WRITER_CODECS:
+            raise ValueError(f"codec must be one of {WRITER_CODECS}, "
+                             f"got {codec!r}")
         self.directory = directory
         self.shard_rows = int(shard_rows)
+        self.codec = codec
         self._columns = tuple(columns) if columns is not None else None
         self.metadata = dict(metadata or {})
         self._specs: Optional[Dict[str, ColumnSpec]] = None
@@ -205,14 +265,8 @@ class SessionStoreWriter:
         self._buffered_rows -= rows
         index = len(self._shards)
         sdir = os.path.join(self.directory, _shard_dirname(index))
-        os.makedirs(sdir, exist_ok=True)
-        checksums = {}
-        for name, arr in shard.items():
-            arr = np.ascontiguousarray(arr)
-            arr.tofile(os.path.join(sdir, f"{name}.bin"))
-            checksums[name] = _crc32(arr)
-        self._shards.append({"name": _shard_dirname(index), "rows": int(rows),
-                             "checksums": checksums})
+        self._shards.append(_write_shard_dir(sdir, _shard_dirname(index),
+                                             shard, rows, self.codec))
 
     # -- commit ----------------------------------------------------------------
     def close(self) -> Dict:
@@ -262,10 +316,10 @@ class SessionStore:
                 "session store (crashed ingest, or wrong path?)")
         with open(path) as f:
             self.manifest = json.load(f)
-        if self.manifest.get("format_version") != FORMAT_VERSION:
+        if self.manifest.get("format_version") not in READABLE_FORMAT_VERSIONS:
             raise ValueError(
                 f"store format_version={self.manifest.get('format_version')} "
-                f"not supported (reader is v{FORMAT_VERSION})")
+                f"not supported (reader accepts {READABLE_FORMAT_VERSIONS})")
         self.columns: Dict[str, ColumnSpec] = {
             k: ColumnSpec.from_json(v)
             for k, v in self.manifest["columns"].items()}
@@ -286,39 +340,85 @@ class SessionStore:
         return os.path.join(self.directory, self.shards[index]["name"],
                             f"{column}.bin")
 
+    def shard_codec(self, index: int, column: str) -> str:
+        """Codec of one column file. v1 manifests carry no codec field —
+        every column is ``raw`` by definition."""
+        return self.shards[index].get("codecs", {}).get(column, "raw")
+
+    def shard_stored_nbytes(self, index: int, column: str) -> int:
+        """Bytes of one column file as stored on disk (encoded size)."""
+        nb = self.shards[index].get("nbytes", {}).get(column)
+        if nb is not None:
+            return int(nb)
+        return int(self.shards[index]["rows"]) * self.columns[column].row_nbytes
+
+    def stored_nbytes(self, columns: Optional[Iterable[str]] = None) -> int:
+        """Total on-disk bytes of the store's column files (manifest
+        arithmetic, no IO) — the number compression shrinks."""
+        names = tuple(columns if columns is not None else self.columns)
+        return sum(self.shard_stored_nbytes(i, n)
+                   for i in range(self.n_shards) for n in names)
+
+    def _check_stored_size(self, index: int, column: str) -> str:
+        path = self._shard_path(index, column)
+        want = self.shard_stored_nbytes(index, column)
+        got = os.path.getsize(path)
+        if got != want:
+            raise ShardCorruptionError(
+                f"{path} is {got} bytes, manifest implies {want} stored "
+                f"({self.shard_rows(index)} rows, "
+                f"codec={self.shard_codec(index, column)}) — truncated or "
+                "mismatched shard file")
+        return path
+
     def open_shard(self, index: int,
                    columns: Optional[Iterable[str]] = None
                    ) -> Dict[str, np.ndarray]:
-        """Memory-map one shard: dict of zero-copy read-only arrays."""
+        """Open one shard: dict of read-only column arrays. ``raw`` columns
+        are zero-copy ``np.memmap``; compressed columns are decoded into
+        RAM (any decode failure raises :class:`ShardCorruptionError` — a
+        corrupt stream that happens to keep its stored size still fails
+        closed)."""
         rows = self.shard_rows(index)
         out = {}
         for name in (columns if columns is not None else self.columns):
             spec = self.columns[name]
-            path = self._shard_path(index, name)
-            want = rows * spec.row_nbytes
-            got = os.path.getsize(path)
-            if got != want:
+            codec = self.shard_codec(index, name)
+            path = self._check_stored_size(index, name)
+            if codec == "raw":
+                out[name] = np.memmap(path, dtype=np.dtype(spec.dtype),
+                                      mode="r", shape=(rows,) + spec.shape)
+                continue
+            with open(path, "rb") as f:
+                data = f.read()
+            try:
+                arr = _codecs.decode(codec, data, np.dtype(spec.dtype),
+                                     (rows,) + spec.shape)
+            except ValueError as e:
                 raise ShardCorruptionError(
-                    f"{path} is {got} bytes, manifest implies {want} "
-                    f"({rows} rows × {spec.row_nbytes} B) — truncated or "
-                    "mismatched shard file")
-            out[name] = np.memmap(path, dtype=np.dtype(spec.dtype), mode="r",
-                                  shape=(rows,) + spec.shape)
+                    f"{path}: {codec} decode failed ({e}) — corrupt or "
+                    "mismatched shard file") from e
+            arr.flags.writeable = False  # match the memmap's read-only view
+            out[name] = arr
         return out
 
     def verify(self, index: Optional[int] = None,
                columns: Optional[Iterable[str]] = None) -> None:
         """Check crc32 of every column file (or one shard's, or a subset of
-        columns). Raises :class:`ShardCorruptionError` on drift."""
+        columns) over the *stored* bytes — no decode needed, so a corrupt
+        compressed stream is caught before any decoder sees it. Raises
+        :class:`ShardCorruptionError` on drift."""
         indices = range(self.n_shards) if index is None else [index]
         for i in indices:
-            cols = self.open_shard(i, columns=columns)
-            for name, arr in cols.items():
+            names = tuple(columns if columns is not None else self.columns)
+            for name in names:
+                path = self._check_stored_size(i, name)
+                with open(path, "rb") as f:
+                    got = _crc32_bytes(f.read())
                 want = self.shards[i]["checksums"][name]
-                got = _crc32(np.asarray(arr))
                 if got != want:
                     raise ShardCorruptionError(
-                        f"checksum mismatch in {self._shard_path(i, name)}: "
+                        f"checksum mismatch in {path}: "
                         f"manifest={want} file={got}")
 
     def read_all(self, columns: Optional[Iterable[str]] = None
@@ -335,17 +435,44 @@ class SessionStore:
 
 def write_session_store(data: Mapping[str, np.ndarray], directory: str,
                         shard_rows: int = 1_000_000,
-                        metadata: Optional[Mapping] = None) -> SessionStore:
-    """One-shot convenience: write an in-memory session dict as a store."""
+                        metadata: Optional[Mapping] = None,
+                        codec: str = "raw") -> SessionStore:
+    """One-shot convenience: write an in-memory session dict as a store.
+
+    Defaults to ``codec="raw"`` — every column file is the array's bytes
+    (v1-identical, memmap reads); pass ``codec="auto"`` for per-column
+    compression."""
     with SessionStoreWriter(directory, shard_rows=shard_rows,
-                            metadata=metadata) as w:
+                            metadata=metadata, codec=codec) as w:
         w.append(data)
     return SessionStore(directory)
+
+
+def split_sizes(n: int, splits: Mapping[str, float]) -> List[int]:
+    """Rows of an ``n``-row chunk routed to each split, in ``splits`` order:
+    ``round(n * fraction)`` for all but the last split, which takes the
+    exact remainder. Shared by the single-process and parallel ingest paths
+    so their routing arithmetic can never drift."""
+    names = list(splits)
+    sizes = [int(round(n * splits[k])) for k in names[:-1]]
+    sizes.append(n - sum(sizes))
+    if min(sizes) < 0:
+        raise ValueError(f"split fractions {dict(splits)} overflow a "
+                         f"chunk of {n} rows")
+    return sizes
+
+
+def split_permutation(seed: int, chunk_index: int, n: int) -> np.ndarray:
+    """The deterministic permutation routing chunk ``chunk_index``'s rows
+    into splits (domain-separated from the chunk-synthesis streams)."""
+    return np.random.default_rng((seed, 7, chunk_index)).permutation(n)
 
 
 def ingest_synthetic(cfg, directory: str, chunk_sessions: int = 100_000,
                      shard_rows: int = 1_000_000,
                      splits: Optional[Mapping[str, float]] = None,
+                     codec: str = "auto",
+                     extra_metadata: Optional[Mapping] = None,
                      ) -> Dict[str, SessionStore]:
     """Stream a synthetic log into session store(s) with bounded memory.
 
@@ -356,19 +483,28 @@ def ingest_synthetic(cfg, directory: str, chunk_sessions: int = 100_000,
     held. With ``splits=None`` the whole log lands in one store at
     ``directory``. Peak memory is O(chunk_sessions + shard_rows) rows,
     independent of ``cfg.n_sessions``.
+
+    ``codec="auto"`` (default) picks a per-column codec per shard; pass
+    ``"raw"`` for v1-byte-compatible stores. This single-process path is the
+    reference implementation: :func:`repro.data.ingest.ingest_synthetic`
+    fans the same chunk stream across worker processes and is pinned
+    byte-identical to it.
     """
     from repro.data.synthetic import iter_click_log_chunks
 
     meta = {"synthetic_config": dataclasses.asdict(cfg),
-            "chunk_sessions": int(chunk_sessions)}
+            "chunk_sessions": int(chunk_sessions),
+            "store_codec": codec}
+    meta.update(extra_metadata or {})
     if splits is None:
         writers = {"": SessionStoreWriter(directory, shard_rows=shard_rows,
-                                          metadata=meta)}
+                                          metadata=meta, codec=codec)}
     else:
         writers = {name: SessionStoreWriter(os.path.join(directory, name),
                                             shard_rows=shard_rows,
                                             metadata=dict(meta, split=name,
-                                                          fraction=frac))
+                                                          fraction=frac),
+                                            codec=codec)
                    for name, frac in splits.items()}
 
     for c, chunk in enumerate(iter_click_log_chunks(cfg, chunk_sessions)):
@@ -376,15 +512,10 @@ def ingest_synthetic(cfg, directory: str, chunk_sessions: int = 100_000,
             writers[""].append(chunk)
             continue
         n = chunk["clicks"].shape[0]
-        perm = np.random.default_rng((cfg.seed, 7, c)).permutation(n)
-        names = list(splits)
-        sizes = [int(round(n * splits[k])) for k in names[:-1]]
-        sizes.append(n - sum(sizes))
-        if min(sizes) < 0:
-            raise ValueError(f"split fractions {dict(splits)} overflow a "
-                             f"chunk of {n} rows")
+        perm = split_permutation(cfg.seed, c, n)
+        sizes = split_sizes(n, splits)
         start = 0
-        for name, size in zip(names, sizes):
+        for name, size in zip(splits, sizes):
             idx = perm[start:start + size]
             start += size
             if size:

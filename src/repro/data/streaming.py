@@ -58,7 +58,21 @@ byte-identical to the unhardened loader):
   with a transient error is restarted once (``watchdog_restarts``) from the
   first window it had not yet delivered — already-queued windows are never
   re-read, so the batch stream is unchanged — before the error is surfaced
-  with its original traceback.
+  with its original traceback. **Shutdown unconditionally wins over the
+  watchdog**: after :meth:`StreamingClickLogLoader.close` (callable from
+  any thread — e.g. the trainer thread while the overlapped
+  ``DevicePrefetcher``'s staging thread consumes the epoch), a dying
+  producer is never restarted, and a restart is also refused while the old
+  producer thread is still alive after its join timeout (two producers
+  feeding one queue would interleave windows nondeterministically).
+
+Compressed stores (format v2) change none of the above: ``open_shard``
+decodes in the read-ahead thread, checksum verification covers the stored
+bytes, and a corrupt compressed column raises the same
+``ShardCorruptionError`` through the same fail-closed / quarantine paths.
+``stream.bytes_stored`` counts bytes as stored on disk next to
+``stream.bytes_read``'s decoded bytes — their ratio is the live
+compression factor of the read path.
 """
 from __future__ import annotations
 
@@ -187,6 +201,21 @@ class StreamingClickLogLoader:
         # loader's order: in-shard seed (seed, epoch) == ClickLogLoader.
         self._single_shard = (self.store.n_shards == 1 and host_count == 1)
         self.state = StreamingLoaderState()
+        self._closed = False
+        self._iter_stop: Optional[threading.Event] = None
+
+    def close(self) -> None:
+        """Permanently shut the loader down, from any thread.
+
+        Sets the active iteration's stop event (the read-ahead producer
+        bails out of its next ``put``, the consumer loop stops waiting) and
+        marks the loader closed — any further iteration raises. The
+        watchdog never restarts a producer after close: shutdown wins the
+        race against a worker dying mid-teardown."""
+        self._closed = True
+        stop = self._iter_stop
+        if stop is not None:
+            stop.set()
 
     # -- epoch geometry (pure arithmetic, no IO) -------------------------------
     def _quarantined_rows(self) -> int:
@@ -261,6 +290,10 @@ class StreamingClickLogLoader:
                             self.store.verify(sid, columns=self.keys)
                 rec.add("stream.bytes_read",
                         sum(np.asarray(v).nbytes for v in cols.values()))
+                stored = getattr(self.store, "shard_stored_nbytes", None)
+                if stored is not None:  # absent on bare-dict test doubles
+                    rec.add("stream.bytes_stored",
+                            sum(stored(sid, k) for k in cols))
                 return cols
             except ShardCorruptionError:
                 raise
@@ -308,13 +341,22 @@ class StreamingClickLogLoader:
         """``_read_plan`` behind a bounded background read-ahead thread,
         with a consumer-side watchdog: a producer that dies is restarted
         (``watchdog_restarts`` times) from its first undelivered entry;
-        after that the original exception propagates, traceback intact."""
+        after that the original exception propagates, traceback intact.
+        :meth:`close` beats the watchdog unconditionally — no restart ever
+        happens after it."""
+        if self._closed:
+            raise RuntimeError("StreamingClickLogLoader is closed")
         if self.read_ahead <= 0:
             for _, pos, block in self._read_plan(epoch, entries):
+                if self._closed:
+                    raise RuntimeError(
+                        "StreamingClickLogLoader.close() was called "
+                        "mid-epoch")
                 yield pos, block
             return
         q: queue.Queue = queue.Queue(maxsize=self.read_ahead)
         stop = threading.Event()
+        self._iter_stop = stop
         progress = {"next": 0}  # first entry index not yet queued
 
         def put(item) -> bool:
@@ -356,30 +398,49 @@ class StreamingClickLogLoader:
                 # depth gauge after the get shows how much read-ahead is
                 # actually banked.
                 t_wait = time.monotonic()
-                item = q.get()
+                while True:
+                    try:
+                        item = q.get(timeout=0.2)
+                        break
+                    except queue.Empty:
+                        # A cross-thread close() while the producer is gone
+                        # must not leave this get() parked forever.
+                        if stop.is_set():
+                            raise RuntimeError(
+                                "StreamingClickLogLoader.close() was "
+                                "called mid-epoch — read-ahead shut down")
                 rec.add("stream.queue_stall_s", time.monotonic() - t_wait)
                 rec.gauge("stream.queue_depth", q.qsize())
                 if item is _DONE:
                     return
                 if isinstance(item, _WorkerError):
                     err = item.error
-                    if restarts_left > 0 and not isinstance(
-                            err, ShardCorruptionError):
-                        restarts_left -= 1
-                        rec.event("watchdog_restart",
-                                  data={"error": repr(err),
-                                        "plan_entry": progress["next"],
-                                        "restarts_left": restarts_left})
-                        rec.add("stream.watchdog_restarts")
-                        self.log_fn(
-                            f"[streaming] read-ahead producer died ({err!r});"
-                            f" restarting from plan entry "
-                            f"{progress['next']} "
-                            f"({restarts_left} restarts left)")
-                        thread.join(timeout=5.0)
-                        thread = start_worker()
-                        continue
-                    raise err
+                    # Shutdown wins: after close() a dead producer is
+                    # surfaced, never resurrected (a restart would read
+                    # shards for an epoch nobody is consuming).
+                    if (stop.is_set() or restarts_left <= 0
+                            or isinstance(err, ShardCorruptionError)):
+                        raise err
+                    thread.join(timeout=5.0)
+                    if thread.is_alive():
+                        # The "dead" producer is actually wedged, not dead
+                        # (its error came from a helper it spawned or it
+                        # hung in teardown): starting a clone would race
+                        # two producers into one queue. Fail loudly.
+                        raise err
+                    restarts_left -= 1
+                    rec.event("watchdog_restart",
+                              data={"error": repr(err),
+                                    "plan_entry": progress["next"],
+                                    "restarts_left": restarts_left})
+                    rec.add("stream.watchdog_restarts")
+                    self.log_fn(
+                        f"[streaming] read-ahead producer died ({err!r});"
+                        f" restarting from plan entry "
+                        f"{progress['next']} "
+                        f"({restarts_left} restarts left)")
+                    thread = start_worker()
+                    continue
                 yield item
         finally:
             stop.set()

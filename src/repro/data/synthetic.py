@@ -157,6 +157,45 @@ def generate_click_log(cfg: SyntheticConfig) -> Dict[str, np.ndarray]:
     return data, meta
 
 
+def chunk_sizes(cfg: SyntheticConfig, chunk_sessions: int):
+    """Row count of every chunk ``iter_click_log_chunks`` would yield —
+    pure arithmetic, no synthesis. The parallel ingest planner maps shard
+    boundaries to chunk ranges with this."""
+    if chunk_sessions < 1:
+        raise ValueError(f"chunk_sessions must be >= 1, got {chunk_sessions}")
+    return [min(chunk_sessions, cfg.n_sessions - lo)
+            for lo in range(0, cfg.n_sessions, chunk_sessions)]
+
+
+# Ground-truth tables are O(n_queries * docs_per_query) and identical for
+# every chunk of a config; a parallel-ingest worker synthesizing many chunks
+# of the same log must not re-draw them per chunk. Keyed by the config
+# (hashable via its dataclass fields), one entry per process is plenty.
+_GROUND_TRUTH_CACHE: Dict = {}
+
+
+def synthesize_chunk(cfg: SyntheticConfig, chunk_index: int,
+                     chunk_sessions: int) -> Dict[str, np.ndarray]:
+    """Synthesize chunk ``chunk_index`` of the deterministic chunk stream —
+    bit-identical to the ``chunk_index``-th yield of
+    :func:`iter_click_log_chunks` for the same ``(cfg, chunk_sessions)``,
+    but addressable at random: workers generate exactly the chunks whose
+    rows land in their shard range and nothing else."""
+    sizes = chunk_sizes(cfg, chunk_sessions)
+    if not 0 <= chunk_index < len(sizes):
+        raise IndexError(f"chunk {chunk_index} out of range: "
+                         f"{len(sizes)} chunks of {chunk_sessions}")
+    key = dataclasses.astuple(cfg)
+    if _GROUND_TRUTH_CACHE.get("key") != key:
+        gamma, theta, sigma = _ground_truth(cfg, np.random.default_rng(cfg.seed))
+        _GROUND_TRUTH_CACHE.update(key=key, tables=(gamma, theta, sigma),
+                                   q_probs=_query_probs(cfg))
+    gamma, theta, sigma = _GROUND_TRUTH_CACHE["tables"]
+    rng = np.random.default_rng((cfg.seed, chunk_index))
+    return _generate_sessions(cfg, sizes[chunk_index], gamma, theta, sigma,
+                              _GROUND_TRUTH_CACHE["q_probs"], rng)
+
+
 def iter_click_log_chunks(cfg: SyntheticConfig, chunk_sessions: int):
     """Generator-mode synthesis: yield the log in bounded-memory chunks.
 

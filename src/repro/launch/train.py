@@ -12,7 +12,12 @@ be far larger than RAM):
 
     PYTHONPATH=src python -m repro.launch.train --model ubm \
         --store-dir /data/clicklog --ingest --sessions 100000000 \
-        [--chunk-sessions 1000000] [--shard-rows 1000000]
+        [--chunk-sessions 1000000] [--shard-rows 1000000] \
+        [--ingest-workers 8] [--store-codec auto]
+
+``--ingest-workers N`` fans chunk synthesis + shard writing over N worker
+processes (byte-identical output to serial); ``--store-codec auto``
+compresses each column per shard (bitpack/zlib/raw, chosen from the bytes).
 
 A directory that already holds ingested ``train/val/test`` stores is reused
 when ``--ingest`` is omitted; the model is sized from the ``SyntheticConfig``
@@ -71,10 +76,15 @@ def make_loaders(args):
             cfg = _synthetic_config(args)
             chunk = args.chunk_sessions or max(args.sessions // 20, 1)
             print(f"[train] ingesting {cfg.n_sessions} sessions into "
-                  f"{args.store_dir} (chunk={chunk}, shard_rows={args.shard_rows})")
+                  f"{args.store_dir} (chunk={chunk}, "
+                  f"shard_rows={args.shard_rows}, "
+                  f"codec={args.store_codec}, "
+                  f"workers={args.ingest_workers})")
             ingest_synthetic(cfg, args.store_dir, chunk_sessions=chunk,
                              shard_rows=args.shard_rows,
-                             splits={"train": 0.8, "val": 0.1, "test": 0.1})
+                             splits={"train": 0.8, "val": 0.1, "test": 0.1},
+                             codec=args.store_codec,
+                             workers=args.ingest_workers)
         train_store = SessionStore(os.path.join(args.store_dir, "train"))
         syn = train_store.metadata.get("synthetic_config")
         if syn is None:
@@ -131,6 +141,14 @@ def main():
                     help="ingest chunk size in sessions (default: sessions/20)")
     ap.add_argument("--shard-rows", type=int, default=1_000_000,
                     help="rows per store shard (unit of shuffle/host placement)")
+    ap.add_argument("--ingest-workers", type=int, default=1,
+                    help="worker processes for --ingest; each owns a "
+                         "disjoint shard block per split, byte-identical "
+                         "output to --ingest-workers 1")
+    ap.add_argument("--store-codec", default="auto", choices=["auto", "raw"],
+                    help="per-column store codec for --ingest: 'auto' picks "
+                         "bitpack/zlib/raw per column per shard; 'raw' pins "
+                         "the v1-byte-compatible memmap layout")
     ap.add_argument("--window-rows", type=int, default=None,
                     help="streaming read window within a shard (default: full "
                          "shard)")
@@ -213,6 +231,12 @@ def main():
                          "(flops/bytes, while-loops scaled by trip count) as "
                          "a roofline telemetry event (one extra AOT compile)")
     args = ap.parse_args()
+    if args.ingest_workers < 1:
+        ap.error(f"--ingest-workers must be >= 1, got {args.ingest_workers}")
+    if (args.ingest_workers > 1 or args.store_codec != "auto") \
+            and not args.store_dir:
+        ap.error("--ingest-workers/--store-codec only apply to the store "
+                 "path — pass --store-dir (and --ingest)")
     if args.max_restarts:
         if not args.ckpt_dir:
             ap.error("--max-restarts requires --ckpt-dir (the restarted "

@@ -20,7 +20,6 @@ from __future__ import annotations
 
 from typing import Any, Dict, Optional
 
-import jax
 import numpy as np
 
 from repro.obs.recorder import Recorder, get_recorder
@@ -89,6 +88,10 @@ class TelemetryDrain:
         leaf at once) and fold it into the epoch accumulators + sinks.
         ``first_step`` is the global index of the chunk's first step, used
         only to tag emitted events."""
+        # Deferred so importing repro.obs (and through it repro.data — the
+        # parallel-ingest worker processes) stays jax-free; only the one
+        # method that touches device memory pays the jax import.
+        import jax
         data = jax.device_get(payload)
         if isinstance(data, dict):
             losses = np.asarray(data["loss"])

@@ -8,8 +8,9 @@ them one at a time. The engine replaces it with a chunked execution core:
 
 * **Chunked scan** — :class:`repro.data.DevicePrefetcher` with
   ``chunk_batches=N`` stacks N host batches into one ``(N, B, ...)`` device
-  array; ``TrainEngine.step`` runs a single jit'd ``lax.scan`` over the
-  chunk with donated ``(params, opt_state)``. One dispatch per N optimizer
+  array (assembled and ``device_put`` on the prefetcher's staging thread,
+  overlapped with compute); ``TrainEngine.step`` runs a single jit'd
+  ``lax.scan`` over the chunk with donated ``(params, opt_state)``. One dispatch per N optimizer
   steps, per-step losses accumulated on device as an ``(N,)`` array the
   caller fetches asynchronously (one chunk behind — see ``Trainer.train``).
 * **Data parallelism** — given a ``mesh`` (see

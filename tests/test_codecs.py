@@ -1,0 +1,96 @@
+"""Storage codec unit tests: exact round-trips, deterministic auto choice,
+and fail-closed decode on corrupt or mis-sized streams."""
+import numpy as np
+import pytest
+
+from repro.data import codecs
+
+
+def roundtrip(codec, arr):
+    stored = codecs.encode(codec, arr)
+    back = codecs.decode(codec, stored, arr.dtype, arr.shape)
+    assert back.dtype == arr.dtype and back.shape == arr.shape
+    np.testing.assert_array_equal(back, arr)
+    return stored
+
+
+@pytest.mark.parametrize("dtype", [np.bool_, np.float32, np.int64])
+def test_bitpack_roundtrip_and_size(dtype):
+    arr = (np.random.default_rng(0).random((37, 5)) < 0.3).astype(dtype)
+    stored = roundtrip("bitpack", arr)
+    assert len(stored) == -(-arr.size // 8)  # 1 bit/elem: 32x on float32
+
+
+def test_bitpack_refuses_lossy_input():
+    with pytest.raises(ValueError, match="0 or 1"):
+        codecs.encode("bitpack", np.array([0.0, 0.5, 1.0], np.float32))
+
+
+def test_zlib_roundtrip():
+    arr = (np.arange(500, dtype=np.int64) % 7).reshape(100, 5)
+    stored = roundtrip("zlib", arr)
+    assert len(stored) < arr.nbytes
+
+
+def test_raw_roundtrip_is_array_bytes():
+    arr = np.random.default_rng(1).standard_normal((50, 3)).astype(np.float32)
+    assert roundtrip("raw", arr) == arr.tobytes()
+
+
+def test_is_binary():
+    assert codecs.is_binary(np.zeros(4, np.bool_))
+    assert codecs.is_binary(np.array([0.0, 1.0], np.float32))
+    assert codecs.is_binary(np.array([0, 1, 1], np.int64))
+    assert not codecs.is_binary(np.array([0.0, 0.5], np.float32))
+    assert not codecs.is_binary(np.array([0, 2], np.int64))
+    assert not codecs.is_binary(np.array(["0", "1"]))
+
+
+def test_unknown_codec_rejected():
+    with pytest.raises(ValueError, match="unknown codec"):
+        codecs.encode("zstd", np.zeros(3, np.float32))
+    with pytest.raises(ValueError, match="unknown codec"):
+        codecs.decode("zstd", b"", np.float32, (3,))
+
+
+def test_decode_fails_closed_on_mis_sized_streams():
+    arr = np.ones((8, 4), np.float32)
+    with pytest.raises(ValueError, match="elements"):
+        codecs.decode("raw", codecs.encode("raw", arr), np.float32, (9, 4))
+    with pytest.raises(ValueError, match="bytes"):
+        codecs.decode("bitpack", codecs.encode("bitpack", arr) + b"\x00",
+                      np.float32, (8, 4))
+    z = codecs.encode("zlib", np.arange(32, dtype=np.int64))
+    with pytest.raises(ValueError, match="elements"):
+        codecs.decode("zlib", z, np.int64, (33,))
+
+
+def test_zlib_corrupt_stream_fails_closed():
+    blob = bytearray(codecs.encode("zlib", np.arange(1000, dtype=np.int64)))
+    blob[len(blob) // 2] ^= 0xFF
+    with pytest.raises(ValueError, match="corrupt|elements"):
+        codecs.decode("zlib", bytes(blob), np.int64, (1000,))
+
+
+def test_encode_auto_choices_roundtrip_and_determinism():
+    binary = (np.random.default_rng(2).random((64, 8)) < .5).astype(np.float32)
+    reps = np.tile(np.arange(1, 9, dtype=np.int32), (64, 1))
+    noise = np.random.default_rng(3).integers(0, 2 ** 62, size=256)
+    picks = {}
+    for arr in (binary, reps, noise):
+        codec, stored = codecs.encode_auto(arr)
+        picks[id(arr)] = codec
+        # chosen encoding is exact and deterministic in the column bytes
+        np.testing.assert_array_equal(
+            codecs.decode(codec, stored, arr.dtype, arr.shape), arr)
+        assert codecs.encode_auto(arr) == (codec, stored)
+    assert picks[id(binary)] == "bitpack"  # exact 1-bit packing wins
+    assert picks[id(reps)] == "zlib"       # repetitive non-binary: DEFLATE
+    assert picks[id(noise)] == "raw"       # incompressible: keep memmap path
+
+
+def test_encode_auto_zlib_acceptance_threshold():
+    # zlib is only chosen when it clears the acceptance ratio
+    reps = np.tile(np.arange(1, 9, dtype=np.int32), (64, 1))
+    _, stored = codecs.encode_auto(reps)
+    assert len(stored) <= codecs.ZLIB_ACCEPT * reps.nbytes

@@ -50,6 +50,15 @@ def store_dir(tmp_path, small_log):
     return d
 
 
+@pytest.fixture()
+def store_dir_auto(tmp_path, small_log):
+    """Same 4-shard store written with per-column compression (format v2)."""
+    cfg, data = small_log
+    d = str(tmp_path / "store_auto")
+    write_session_store(data, d, shard_rows=150, codec="auto")
+    return d
+
+
 def _model(cfg):
     return PositionBasedModel(query_doc_pairs=cfg.n_query_doc_pairs,
                               positions=cfg.positions)
@@ -224,6 +233,42 @@ def test_streaming_skip_policy_rejected_multihost(store_dir):
                                 corrupt_policy="quarantine")
 
 
+def test_compressed_store_corruption_fails_closed(store_dir_auto):
+    """Corrupting a *compressed* column (bitpacked clicks) trips the same
+    crc-over-stored-bytes path as a raw one under verify_checksums=True."""
+    store = SessionStore(store_dir_auto)
+    assert store.shard_codec(2, "clicks") == "bitpack"
+    corrupt_shard_file(store_dir_auto, shard=2, column="clicks", seed=1)
+    loader = StreamingClickLogLoader(store_dir_auto, batch_size=50,
+                                     verify_checksums=True)
+    with pytest.raises(ShardCorruptionError):
+        list(iter(loader))
+
+
+def test_compressed_store_quarantine_is_deterministic(store_dir_auto):
+    """skip-policy quarantine works unchanged on a compressed store: the
+    corrupt shard contributes zero rows, replayably."""
+    clean = [b["clicks"].copy() for b in iter(
+        StreamingClickLogLoader(store_dir_auto, batch_size=50, seed=3))]
+    corrupt_shard_file(store_dir_auto, shard=1, column="clicks", seed=1)
+    logs = []
+
+    def run():
+        ld = StreamingClickLogLoader(store_dir_auto, batch_size=50, seed=3,
+                                     verify_checksums=True,
+                                     corrupt_policy="skip",
+                                     log_fn=logs.append)
+        return ld, [b["clicks"].copy() for b in iter(ld)]
+
+    ld_a, run_a = run()
+    ld_b, run_b = run()
+    assert ld_a.quarantined == {1}
+    assert len(run_a) == len(run_b) < len(clean)
+    for x, y in zip(run_a, run_b):
+        np.testing.assert_array_equal(x, y)
+    assert any("QUARANTINED shard 1" in m for m in logs)
+
+
 def test_streaming_io_retry_recovers(store_dir):
     clean = [b["clicks"].copy() for b in iter(
         StreamingClickLogLoader(store_dir, batch_size=50, seed=3))]
@@ -292,6 +337,47 @@ def test_abandoned_iterator_joins_reader_thread(store_dir):
             break
         time.sleep(0.01)
     assert not alive, "read-ahead thread leaked after iterator abandonment"
+
+
+def test_close_beats_watchdog_no_restart_after_shutdown(store_dir):
+    """Regression: a producer dying around a cross-thread close() must
+    surface shutdown (or the original error) immediately — the watchdog
+    never restarts a producer after close(), even with restarts budgeted."""
+    store = SessionStore(store_dir)
+    real = store.open_shard
+
+    def open_shard(i, **kw):
+        if i != 0:
+            raise OSError(f"injected: shard {i} unreachable")
+        return real(i, **kw)
+
+    store.open_shard = open_shard
+    logs = []
+    loader = StreamingClickLogLoader(store, batch_size=50, shuffle=False,
+                                     read_ahead=2, watchdog_restarts=5,
+                                     log_fn=logs.append)
+    it = iter(loader)
+    next(it)  # shard 0 delivered; the producer dies on shard 1
+    loader.close()
+    with pytest.raises((RuntimeError, OSError)):
+        for _ in it:
+            pass
+    assert not any("restarting" in m for m in logs)
+    # closed is permanent: a fresh epoch refuses to start
+    with pytest.raises(RuntimeError, match="closed"):
+        next(iter(loader))
+
+
+def test_close_stops_inline_stream_too(store_dir):
+    """The read_ahead=0 path honors close() between windows as well."""
+    loader = StreamingClickLogLoader(store_dir, batch_size=50, shuffle=False,
+                                     read_ahead=0)
+    it = iter(loader)
+    next(it)
+    loader.close()
+    with pytest.raises(RuntimeError, match="close"):
+        for _ in it:
+            pass
 
 
 # -- hardened checkpoints ------------------------------------------------------

@@ -8,8 +8,9 @@ import numpy as np
 import pytest
 
 from repro.data import (ClickLogLoader, DevicePrefetcher, SessionStore,
-                        SessionStoreWriter, StreamingClickLogLoader,
-                        SyntheticConfig, generate_click_log, ingest_synthetic,
+                        SessionStoreWriter, ShardCorruptionError,
+                        StreamingClickLogLoader, SyntheticConfig,
+                        generate_click_log, ingest_synthetic,
                         iter_click_log_chunks, write_session_store)
 
 
@@ -129,6 +130,101 @@ def test_truncated_shard_file_detected_on_open(tmp_path, log):
     path.write_bytes(path.read_bytes()[:-8])
     with pytest.raises(ValueError, match="truncated or mismatched"):
         store.open_shard(0)
+
+
+# -- format v2: per-column compression + v1 compat -----------------------------
+
+def test_raw_store_bytes_are_the_v1_format(tmp_path, log):
+    """codec='raw' (the default) stores each column's exact array bytes —
+    the v1 on-disk format — so raw v2 stores are byte-compatible with v1."""
+    _, data = log
+    store = write_session_store(data, str(tmp_path / "s"), shard_rows=400)
+    raw = (tmp_path / "s" / "shard_00000" / "clicks.bin").read_bytes()
+    assert raw == data["clicks"][:400].tobytes()
+    for i in range(store.n_shards):
+        for col in store.columns:
+            assert store.shard_codec(i, col) == "raw"
+
+
+def test_v1_manifest_reads_unchanged(tmp_path, log):
+    """A v1 store (format_version=1, no codec/nbytes fields) opens,
+    verifies, and reads bit-for-bit through the v2 reader."""
+    _, data = log
+    write_session_store(data, str(tmp_path / "s"), shard_rows=300)
+    mpath = tmp_path / "s" / "manifest.json"
+    manifest = json.loads(mpath.read_text())
+    manifest["format_version"] = 1
+    for shard in manifest["shards"]:
+        del shard["codecs"]
+        del shard["nbytes"]
+    mpath.write_text(json.dumps(manifest))
+    store = SessionStore(str(tmp_path / "s"), verify=True)
+    assert store.shard_codec(0, "clicks") == "raw"
+    assert isinstance(store.open_shard(0)["clicks"], np.memmap)
+    back = store.read_all()
+    for k in data:
+        np.testing.assert_array_equal(back[k], data[k], err_msg=k)
+    # stored size falls back to rows * row_nbytes manifest arithmetic
+    assert (store.shard_stored_nbytes(0, "clicks")
+            == 300 * store.columns["clicks"].row_nbytes)
+
+
+def test_unreadable_format_version_rejected(tmp_path, log):
+    _, data = log
+    write_session_store(data, str(tmp_path / "s"), shard_rows=500)
+    mpath = tmp_path / "s" / "manifest.json"
+    manifest = json.loads(mpath.read_text())
+    manifest["format_version"] = 99
+    mpath.write_text(json.dumps(manifest))
+    with pytest.raises(ValueError, match="format_version"):
+        SessionStore(str(tmp_path / "s"))
+
+
+def test_auto_codec_roundtrip_compression_and_verify(tmp_path, log):
+    _, data = log
+    raw = write_session_store(data, str(tmp_path / "raw"), shard_rows=250)
+    auto = write_session_store(data, str(tmp_path / "auto"), shard_rows=250,
+                               codec="auto")
+    back = auto.read_all()
+    for k in data:
+        assert back[k].dtype == data[k].dtype
+        np.testing.assert_array_equal(back[k], data[k], err_msg=k)
+    auto.verify()  # crc covers the stored (encoded) bytes
+    # 0/1 columns bitpack (32x on float32 clicks); overall clears 2x easily
+    assert auto.shard_codec(0, "clicks") == "bitpack"
+    assert auto.shard_codec(0, "mask") == "bitpack"
+    assert auto.stored_nbytes(["clicks"]) * 16 <= raw.stored_nbytes(["clicks"])
+    assert auto.stored_nbytes() * 2 <= raw.stored_nbytes()
+    # the manifest's nbytes map matches the files on disk
+    for i in range(auto.n_shards):
+        for col in auto.columns:
+            path = tmp_path / "auto" / f"shard_{i:05d}" / f"{col}.bin"
+            assert path.stat().st_size == auto.shard_stored_nbytes(i, col)
+    # decoded columns are read-only, like the raw memmaps
+    with pytest.raises(ValueError):
+        auto.open_shard(0)["clicks"][0, 0] = 1.0
+
+
+def test_compressed_shard_corruption_fails_closed(tmp_path, log):
+    _, data = log
+    store = write_session_store(data, str(tmp_path / "s"), shard_rows=250,
+                                codec="auto")
+    col = next(c for c in store.columns
+               if store.shard_codec(1, c) == "zlib")
+    path = tmp_path / "s" / "shard_00001" / f"{col}.bin"
+    blob = bytearray(path.read_bytes())
+    blob[len(blob) // 2] ^= 0xFF
+    path.write_bytes(bytes(blob))
+    # crc over the stored bytes catches the flip without decoding
+    with pytest.raises(ValueError, match="checksum mismatch"):
+        store.verify(1)
+    # same size, bad stream: the decode itself fails closed on open
+    with pytest.raises(ShardCorruptionError):
+        store.open_shard(1)
+    # truncation is caught by the stored-size check before any decode
+    path.write_bytes(bytes(blob[:-5]))
+    with pytest.raises(ValueError, match="truncated or mismatched"):
+        store.open_shard(1)
 
 
 # -- chunked synthesis ---------------------------------------------------------
@@ -325,6 +421,70 @@ def test_read_ahead_failure_propagates(tmp_path, log):
     os.remove(tmp_path / "s" / "shard_00002" / "clicks.bin")
     with pytest.raises(FileNotFoundError):
         list(iter(loader))
+
+
+# -- overlapped device prefetch ------------------------------------------------
+
+def test_prefetcher_overlap_matches_inline(tmp_path, log):
+    """overlap=True (staging thread) must yield the identical item stream —
+    payloads, resume states, chunk counts — as the inline overlap=False
+    path, in both batch and chunk modes."""
+    _, data = log
+    store = write_session_store(data, str(tmp_path / "s"), shard_rows=300)
+    mk = lambda: StreamingClickLogLoader(store, batch_size=64, seed=3,
+                                         drop_last=False)
+    inline = list(DevicePrefetcher(mk(), size=3, overlap=False))
+    staged = list(DevicePrefetcher(mk(), size=3, overlap=True))
+    assert [s for _, s in inline] == [s for _, s in staged]
+    batches_equal([{k: np.asarray(v) for k, v in b.items()}
+                   for b, _ in inline],
+                  [{k: np.asarray(v) for k, v in b.items()}
+                   for b, _ in staged])
+    inline_c = list(DevicePrefetcher(mk(), size=2, chunk_batches=4,
+                                     overlap=False))
+    staged_c = list(DevicePrefetcher(mk(), size=2, chunk_batches=4,
+                                     overlap=True))
+    assert [(s, n) for _, s, n in inline_c] == \
+        [(s, n) for _, s, n in staged_c]
+    batches_equal([{k: np.asarray(v) for k, v in c.items()}
+                   for c, _, _ in inline_c],
+                  [{k: np.asarray(v) for k, v in c.items()}
+                   for c, _, _ in staged_c])
+
+
+def test_prefetcher_overlap_propagates_reader_errors(tmp_path, log):
+    """A staging-thread failure (missing shard file) re-raises on the
+    consumer instead of hanging or truncating the epoch."""
+    _, data = log
+    store = write_session_store(data, str(tmp_path / "s"), shard_rows=300)
+    os.remove(tmp_path / "s" / "shard_00002" / "clicks.bin")
+    loader = StreamingClickLogLoader(store, batch_size=64, seed=0,
+                                     read_ahead=2)
+    with pytest.raises(FileNotFoundError):
+        list(DevicePrefetcher(loader, size=2))
+
+
+def test_prefetcher_overlap_abandoned_mid_epoch_shuts_down(tmp_path, log):
+    """Breaking out of an overlapped iteration must unwind the staging
+    thread and the loader's read-ahead machinery promptly."""
+    import threading
+    import time
+    _, data = log
+    store = write_session_store(data, str(tmp_path / "s"), shard_rows=300)
+    loader = StreamingClickLogLoader(store, batch_size=64, seed=3)
+    it = iter(DevicePrefetcher(loader, size=2))
+    next(it)
+    next(it)
+    it.close()  # generator finally: stop + join the staging thread
+    deadline = time.time() + 5.0
+    while time.time() < deadline:
+        leaked = [t for t in threading.enumerate()
+                  if t.name in ("device-prefetch", "store-read-ahead")
+                  and t.is_alive()]
+        if not leaked:
+            break
+        time.sleep(0.02)
+    assert not leaked, "prefetch threads leaked after iterator abandonment"
 
 
 def test_stream_trains_identically_to_in_memory(tmp_path, log):
